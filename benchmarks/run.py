@@ -1,0 +1,43 @@
+"""Benchmark driver — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  bench_kernels   -> paper Fig. 4 (kernel breakdown)
+  bench_e2e       -> paper Fig. 3 (end-to-end regimes)
+  bench_outofcore -> paper §5.3 (billion-point streaming)
+  bench_compile   -> paper Fig. 5 (time-to-first-run)
+  roofline        -> dry-run roofline table (deliverable g)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    sections = []
+    from benchmarks import (bench_compile, bench_e2e, bench_kernels,
+                            bench_outofcore, roofline)
+    sections = [
+        ("kernels", bench_kernels.rows),
+        ("e2e", bench_e2e.rows),
+        ("outofcore", bench_outofcore.rows),
+        ("compile", bench_compile.rows),
+        ("roofline", roofline.rows),
+    ]
+    failures = 0
+    for name, fn in sections:
+        try:
+            for row in fn():
+                print(row, flush=True)
+        except Exception as e:
+            failures += 1
+            print(f"{name}_SECTION_ERROR,0.0,{type(e).__name__}:{e}",
+                  flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

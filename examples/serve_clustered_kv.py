@@ -1,0 +1,51 @@
+"""End-to-end serving driver (the paper's motivating online workload):
+serve a small LM with batched requests, comparing dense decode against
+flash-kmeans clustered-KV sparse decode.
+
+  PYTHONPATH=src python examples/serve_clustered_kv.py [--arch llama3-8b]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models import model as M
+from repro.serve.engine import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=192)
+    ap.add_argument("--gen", type=int, default=24)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    key = jax.random.PRNGKey(0)
+    params, _ = M.init_model(key, cfg, max_pos=args.prompt_len + args.gen + 64)
+    prompts = jax.random.randint(
+        jax.random.fold_in(key, 1), (args.batch, args.prompt_len), 0,
+        cfg.vocab_size)
+
+    results = {}
+    for mode in ("dense", "clustered"):
+        eng = Engine(cfg, params, ServeConfig(
+            max_seq=args.prompt_len + args.gen + 8, mode=mode, recent=64))
+        t0 = time.time()
+        out = eng.generate(prompts, args.gen)
+        out.block_until_ready()
+        results[mode] = (out, time.time() - t0)
+        print(f"{mode:10s}: {args.batch * args.gen} tokens in "
+              f"{results[mode][1]:.2f}s (incl. compile + clustering)")
+
+    agree = float(jnp.mean(
+        (results["dense"][0] == results["clustered"][0]).astype(jnp.float32)))
+    print(f"greedy-token agreement dense vs clustered-KV: {agree:.2%}")
+    print("sample:", results["clustered"][0][0, :12].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Exhaustive block-shape autotuner — the *baseline* the paper's
+cache-aware heuristic is measured against (paper Fig. 5 / our
+benchmarks/bench_compile.py).
+
+Compiles and times every candidate (B_N, B_K) pair for both kernels on the
+given shape, returning the oracle config plus tuning telemetry
+(#compiles, wall seconds). This is deliberately the expensive path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import heuristics
+from repro.kernels import ops
+from repro.kernels.ops import BlockConfig
+
+
+@dataclasses.dataclass
+class TuneReport:
+    best: BlockConfig
+    num_compiles: int
+    tune_seconds: float
+    best_assign_us: float
+    best_update_us: float
+    table: dict  # (kind, bn, bk) -> microseconds
+
+
+_CANDS = (128, 256, 512, 1024)
+
+
+def _time_fn(fn, *args, reps: int = 3) -> float:
+    fn(*args)[0].block_until_ready()           # compile + warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.tree_util.tree_map(lambda a: a.block_until_ready(), out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def exhaustive_tune(n: int, k: int, d: int, *, dtype=jnp.float32,
+                    hw: heuristics.Hardware = heuristics.TPU_V5E,
+                    interpret: bool | None = None,
+                    cpu_time_cap: int = 4096) -> TuneReport:
+    # On CPU the kernels execute in interpret mode, so per-candidate
+    # timing uses a capped problem size — the tuner's *structure*
+    # (#compiles, per-compile cost) is what the TTFR comparison measures.
+    if jax.default_backend() != "tpu":
+        n = min(n, cpu_time_cap)
+        k = min(k, cpu_time_cap // 8)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (n, d), dtype)
+    c = jax.random.normal(jax.random.fold_in(key, 1), (k, d), dtype)
+
+    budget = int(hw.vmem_bytes * 0.7)
+    table: dict = {}
+    compiles = 0
+    t0 = time.perf_counter()
+
+    best_a, best_a_us = None, float("inf")
+    for bn, bk in itertools.product(_CANDS, _CANDS):
+        if heuristics.assign_footprint(bn, bk, d, dtype.dtype.itemsize
+                                       if hasattr(dtype, "dtype")
+                                       else jnp.dtype(dtype).itemsize) > budget:
+            continue
+        fn = lambda xx, cc, bn=bn, bk=bk: ops.flash_assign(
+            xx, cc, block_n=bn, block_k=bk, interpret=interpret)
+        us = _time_fn(fn, x, c)
+        compiles += 1
+        table[("assign", bn, bk)] = us
+        if us < best_a_us:
+            best_a, best_a_us = (bn, bk), us
+
+    a, _ = ops.flash_assign(x, c, block_n=best_a[0], block_k=best_a[1],
+                            interpret=interpret)
+    best_u, best_u_us = None, float("inf")
+    for bn, bk in itertools.product(_CANDS, _CANDS):
+        if heuristics.update_footprint(bn, bk, d,
+                                       jnp.dtype(dtype).itemsize) > budget:
+            continue
+        fn = lambda xx, aa, bn=bn, bk=bk: ops.sort_inverse_update(
+            xx, aa, k=k, block_n=bn, block_k=bk, interpret=interpret)
+        us = _time_fn(fn, x, a)
+        compiles += 1
+        table[("update", bn, bk)] = us
+        if us < best_u_us:
+            best_u, best_u_us = (bn, bk), us
+
+    return TuneReport(
+        best=BlockConfig(assign_block_n=best_a[0], assign_block_k=best_a[1],
+                         update_block_n=best_u[0], update_block_k=best_u[1]),
+        num_compiles=compiles,
+        tune_seconds=time.perf_counter() - t0,
+        best_assign_us=best_a_us,
+        best_update_us=best_u_us,
+        table=table,
+    )
+
+
+def heuristic_tune(n: int, k: int, d: int, *, dtype=jnp.float32,
+                   hw: heuristics.Hardware = heuristics.TPU_V5E) -> TuneReport:
+    """The paper's path: closed-form config, one compile per kernel."""
+    t0 = time.perf_counter()
+    blk = heuristics.choose_blocks(n, k, d,
+                                   dtype_bytes=jnp.dtype(dtype).itemsize,
+                                   hw=hw)
+    return TuneReport(best=blk, num_compiles=2,
+                      tune_seconds=time.perf_counter() - t0,
+                      best_assign_us=float("nan"),
+                      best_update_us=float("nan"), table={})

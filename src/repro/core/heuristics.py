@@ -1,0 +1,128 @@
+"""Cache-aware compile heuristic (paper §4.3), re-derived for TPU.
+
+The paper picks GPU kernel configurations analytically from L1/L2 cache
+sizes and the problem shape instead of exhaustive autotuning. The TPU
+analogue: pick Pallas block shapes from the VMEM capacity and MXU/VPU
+alignment rules in closed form.
+
+Selection model (per kernel):
+  - tiles must be lane-aligned (128) on the minor matmul dims and
+    sublane-aligned (8) elsewhere;
+  - the resident working set (input tiles double-buffered by the Pallas
+    pipeline + f32 intermediates + output/accumulator tiles) must fit a
+    conservative fraction of VMEM;
+  - subject to that, maximize MXU utilization: prefer B_K, B_N >= 128 and
+    grow the streamed dimension first (more reuse of the resident tile).
+
+This module is also the single source of truth for the hardware constants
+used by the roofline analysis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.kernels.ops import BlockConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    vmem_bytes: int          # per-core VMEM
+    lane: int                # vector lane count (minor tile alignment)
+    sublane: int             # sublane count
+    mxu: int                 # systolic array dim
+    flops_bf16: float        # peak FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    ici_bw: float            # bytes/s per link
+    hbm_bytes: int           # HBM capacity per chip
+    h2d_bw: float            # host->device bytes/s (PCIe analogue)
+
+
+TPU_V5E = Hardware(
+    name="tpu_v5e",
+    vmem_bytes=16 * 2**20,
+    lane=128,
+    sublane=8,
+    mxu=128,
+    flops_bf16=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    hbm_bytes=16 * 2**30,
+    h2d_bw=32e9,
+)
+
+# Budget fraction: leave headroom for Pallas pipeline internals + spills.
+_VMEM_FRACTION = 0.7
+_CANDIDATE_TILES = (128, 256, 512, 1024, 2048)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def _fit_minor(limit: int, size: int, align: int) -> int:
+    """Largest aligned tile <= limit covering at most size."""
+    best = align
+    for t in _CANDIDATE_TILES:
+        if t <= limit and t <= _round_up(size, align):
+            best = max(best, t)
+    return best
+
+
+def assign_footprint(bn: int, bk: int, d: int, bytes_in: int) -> int:
+    """VMEM bytes held live by one FlashAssign grid step (double-buffered)."""
+    x_tile = bn * d * bytes_in          # resident across K sweep
+    c_tiles = 2 * bk * d * bytes_in     # double-buffered stream
+    score = bn * bk * 4                 # f32 intermediate
+    state = bn * (4 + 4)                # running (m, a)
+    out = bn * (4 + 4)
+    return x_tile + c_tiles + score + state + out
+
+
+def update_footprint(bn: int, bk: int, d: int, bytes_in: int) -> int:
+    """VMEM bytes for one sort-inverse grid step."""
+    x_tiles = 2 * bn * d * bytes_in     # double-buffered point stream
+    ids = 2 * bn * 4
+    onehot = bn * bk * bytes_in
+    acc = bk * d * 4                    # resident output block (f32)
+    partial = bk * d * 4
+    cnt = bk * 4 * 2
+    return x_tiles + ids + onehot + acc + partial + cnt
+
+
+def choose_blocks(n: int, k: int, d: int, *, dtype_bytes: int = 4,
+                  hw: Hardware = TPU_V5E) -> BlockConfig:
+    """Closed-form block selection — zero search, O(#candidates) arithmetic."""
+    budget = int(hw.vmem_bytes * _VMEM_FRACTION)
+
+    # --- FlashAssign: the K stream wants large B_K tiles for MXU shape;
+    # the resident point tile then takes what is left.
+    a_bk = _fit_minor(512, k, hw.lane)
+    a_bn = hw.sublane
+    for bn in _CANDIDATE_TILES:
+        if bn > _round_up(n, hw.sublane):
+            break
+        if assign_footprint(bn, a_bk, d, dtype_bytes) <= budget:
+            a_bn = bn
+    while assign_footprint(a_bn, a_bk, d, dtype_bytes) > budget and a_bk > hw.lane:
+        a_bk //= 2
+    while assign_footprint(a_bn, a_bk, d, dtype_bytes) > budget and a_bn > hw.sublane:
+        a_bn //= 2
+
+    # --- Sort-inverse: B_K bounds both the one-hot minor dim and the
+    # resident accumulator (bk*d f32); keep it modest, grow the point
+    # stream tile (segment locality improves with larger B_N).
+    u_bk = _fit_minor(256, k, hw.lane)
+    u_bn = hw.sublane
+    for bn in _CANDIDATE_TILES:
+        if bn > _round_up(n, hw.sublane):
+            break
+        if update_footprint(bn, u_bk, d, dtype_bytes) <= budget:
+            u_bn = bn
+    while update_footprint(u_bn, u_bk, d, dtype_bytes) > budget and u_bk > hw.lane:
+        u_bk //= 2
+    while update_footprint(u_bn, u_bk, d, dtype_bytes) > budget and u_bn > hw.sublane:
+        u_bn //= 2
+
+    return BlockConfig(assign_block_n=a_bn, assign_block_k=a_bk,
+                       update_block_n=u_bn, update_block_k=u_bk)

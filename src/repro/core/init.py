@@ -1,0 +1,55 @@
+"""Centroid initialization: random subset and k-means++ (exact D² sampling)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def random_init(key: Array, x: Array, k: int) -> Array:
+    """k distinct data points, uniformly sampled."""
+    n = x.shape[0]
+    idx = jax.random.choice(key, n, (k,), replace=False)
+    return jnp.take(x, idx, axis=0)
+
+
+def kmeans_plus_plus(key: Array, x: Array, k: int) -> Array:
+    """Exact k-means++ (Arthur & Vassilvitskii): each next centroid is drawn
+    with probability proportional to its squared distance to the closest
+    already-chosen centroid. O(NKd) total, fully jittable."""
+    n, d = x.shape
+    x32 = x.astype(jnp.float32)
+    xsq = jnp.sum(x32 * x32, axis=-1)
+
+    k0, key = jax.random.split(key)
+    first = jnp.take(x32, jax.random.randint(k0, (), 0, n), axis=0)
+
+    def dist_to(c):
+        return jnp.maximum(
+            xsq + jnp.sum(c * c) - 2.0 * (x32 @ c), 0.0)
+
+    def body(i, carry):
+        cents, min_d, key = carry
+        key, kd = jax.random.split(key)
+        # Gumbel-max categorical draw proportional to min_d.
+        logits = jnp.where(min_d > 0, jnp.log(min_d), -jnp.inf)
+        idx = jnp.argmax(logits + jax.random.gumbel(kd, (n,)))
+        c_new = jnp.take(x32, idx, axis=0)
+        cents = jax.lax.dynamic_update_index_in_dim(cents, c_new, i, 0)
+        min_d = jnp.minimum(min_d, dist_to(c_new))
+        return cents, min_d, key
+
+    cents = jnp.zeros((k, d), jnp.float32)
+    cents = jax.lax.dynamic_update_index_in_dim(cents, first, 0, 0)
+    min_d = dist_to(first)
+    cents, _, _ = jax.lax.fori_loop(1, k, body, (cents, min_d, key))
+    return cents.astype(x.dtype)
+
+
+def init_centroids(key: Array, x: Array, k: int, method: str) -> Array:
+    if method == "random":
+        return random_init(key, x, k)
+    if method in ("kmeans++", "k-means++", "plusplus"):
+        return kmeans_plus_plus(key, x, k)
+    raise ValueError(f"unknown init method {method!r}")

@@ -1,0 +1,179 @@
+"""jit'd public wrappers around the flash-kmeans Pallas kernels.
+
+Handles shape padding to tile multiples, platform dispatch (interpret mode
+on CPU, compiled Pallas on TPU), batching, and the host-side prologue of
+the sort-inverse update (argsort + row gather + tile-pair compaction).
+
+All wrappers accept an optional ``BlockConfig``; when omitted the
+cache-aware heuristic (``repro.core.heuristics``) picks one.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_assign as _fa
+from repro.kernels import ref as _ref
+from repro.kernels import sort_inverse_update as _siu
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockConfig:
+    """Tile shapes for the two kernels (see core.heuristics for selection)."""
+    assign_block_n: int = 256
+    assign_block_k: int = 256
+    update_block_n: int = 512
+    update_block_k: int = 256
+
+    def validate(self) -> "BlockConfig":
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if v <= 0 or (v & (v - 1)) != 0 and v % 128 != 0:
+                raise ValueError(f"{f.name}={v} must be a positive power of "
+                                 "two or a multiple of 128")
+        return self
+
+
+def default_interpret() -> bool:
+    """Pallas interpret mode everywhere except a real TPU backend."""
+    return jax.default_backend() != "tpu"
+
+
+def _pad_to(x: Array, mult: int, axis: int, value) -> Array:
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+# ---------------------------------------------------------------------------
+# FlashAssign
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k",
+                                             "interpret", "want_dists"))
+def flash_assign(x: Array, c: Array, *, block_n: int = 256,
+                 block_k: int = 256, interpret: bool | None = None,
+                 want_dists: bool = True) -> tuple[Array, Array]:
+    """Fused assignment. x: (N, d), c: (K, d).
+
+    Returns ``(assignments int32 (N,), min_sq_dists f32 (N,))``. Distances
+    are true squared Euclidean distances (the ``||x||^2`` term is re-added
+    outside the kernel); pass ``want_dists=False`` to skip that add.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, d = x.shape
+    k = c.shape[0]
+    block_n = min(block_n, _round_up(n, 8))
+    block_k = min(block_k, _round_up(k, 8))
+    xp = _pad_to(x, block_n, 0, 0)
+    cp = _pad_to(c, block_k, 0, 0)
+    a, m = _fa.flash_assign_raw(xp, cp, block_n=block_n, block_k=block_k,
+                                k_actual=k, interpret=interpret)
+    a, m = a[:n], m[:n]
+    if want_dists:
+        x32 = x.astype(jnp.float32)
+        m = m + jnp.sum(x32 * x32, axis=-1)
+        m = jnp.maximum(m, 0.0)  # clamp tiny negative fp residue
+    return a, m
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# Sort-Inverse Update
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k", "block_n", "block_k",
+                                             "interpret"))
+def sort_inverse_update(x: Array, a: Array, *, k: int, block_n: int = 512,
+                        block_k: int = 256, interpret: bool | None = None
+                        ) -> tuple[Array, Array]:
+    """Contention-free centroid statistics. x: (N, d), a: (N,) int32.
+
+    Returns ``(sums f32 (K, d), counts f32 (K,))`` — exact (up to f32
+    accumulation order) equals of the scatter reference.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, d = x.shape
+    block_n = min(block_n, _round_up(n, 8))
+    block_k = min(block_k, _round_up(k, 8))
+    k_tiles = _round_up(k, block_k) // block_k
+
+    # 1) sort the 1-D assignment vector only (cheap: 4-byte keys).
+    sorted_idx = jnp.argsort(a).astype(jnp.int32)
+    a_sorted = jnp.take(a, sorted_idx)
+
+    # 2) pad points into the dummy k-tile, then one streaming row gather.
+    pad_id = jnp.int32(k_tiles * block_k)
+    a_sorted = _pad_to(a_sorted, block_n, 0, pad_id)
+    sorted_idx = _pad_to(sorted_idx, block_n, 0, 0)
+    x_sorted = jnp.take(x, sorted_idx, axis=0)        # (N_pad, d)
+    # zero padded rows so the dummy gather of row 0 contributes nothing
+    n_pad = a_sorted.shape[0]
+    row_valid = jnp.arange(n_pad) < n
+    x_sorted = jnp.where(row_valid[:, None], x_sorted, 0)
+
+    n_tiles = n_pad // block_n
+    pair_n, pair_k = _siu.build_tile_pairs(
+        a_sorted, block_n=block_n, block_k=block_k,
+        n_tiles=n_tiles, k_tiles=k_tiles)
+
+    s_pad, cnt_pad = _siu.sort_inverse_update_raw(
+        x_sorted, a_sorted, pair_n, pair_k,
+        block_n=block_n, block_k=block_k, k_tiles=k_tiles,
+        interpret=interpret)
+    # k-tiles with no intersecting point tile are never visited by the
+    # kernel grid — their output blocks are uninitialized. Zero them.
+    visited = jnp.zeros((k_tiles + 1,), jnp.bool_).at[pair_k].set(True)
+    row_tile = jnp.arange((k_tiles + 1) * block_k) // block_k
+    live = visited[row_tile]
+    s_pad = jnp.where(live[:, None], s_pad, 0.0)
+    cnt_pad = jnp.where(live, cnt_pad, 0.0)
+    return s_pad[:k], cnt_pad[:k]
+
+
+# ---------------------------------------------------------------------------
+# Batched variants + centroid update convenience
+# ---------------------------------------------------------------------------
+
+def flash_assign_batched(x: Array, c: Array, **kw) -> tuple[Array, Array]:
+    """x: (B, N, d), c: (B, K, d) — per-batch centroids (paper's B axis)."""
+    return jax.vmap(lambda xb, cb: flash_assign(xb, cb, **kw))(x, c)
+
+
+def sort_inverse_update_batched(x: Array, a: Array, *, k: int, **kw
+                                ) -> tuple[Array, Array]:
+    return jax.vmap(lambda xb, ab: sort_inverse_update(xb, ab, k=k, **kw))(x, a)
+
+
+def centroid_update(x: Array, a: Array, c_prev: Array, *,
+                    impl: str = "sort_inverse", block_n: int = 512,
+                    block_k: int = 256, interpret: bool | None = None
+                    ) -> Array:
+    """Full update stage with empty-cluster fallback (keeps old centroid)."""
+    k = c_prev.shape[0]
+    if impl == "sort_inverse":
+        s, cnt = sort_inverse_update(x, a, k=k, block_n=block_n,
+                                     block_k=block_k, interpret=interpret)
+    elif impl == "scatter":
+        s, cnt = _ref.update_scatter_ref(x, a, k)
+    elif impl == "dense_onehot":
+        s, cnt = _ref.update_dense_onehot_ref(x, a, k)
+    else:
+        raise ValueError(f"unknown update impl {impl!r}")
+    new_c = s / jnp.maximum(cnt, 1.0)[:, None]
+    return jnp.where((cnt > 0)[:, None], new_c,
+                     c_prev.astype(jnp.float32)).astype(c_prev.dtype)

@@ -1,0 +1,269 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (zero allocation) and record memory / cost /
+collective analysis for the roofline report.
+
+The XLA_FLAGS line above MUST run before any jax import — jax locks the
+device count at first init. Do not import this module from tests.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all            # sweep, one subprocess/cell
+"""
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, all_configs, get_config
+from repro.launch import hlo_analysis, hlo_cost, specs as SP
+from repro.launch.mesh import make_production_mesh
+from repro.train.train_step import make_train_step, make_serve_step
+
+
+def cell_skipped(cfg, shape_name: str) -> str | None:
+    for name, why in cfg.skip_shapes:
+        if name == shape_name:
+            return why
+    return None
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str = "results/dryrun") -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    why = cell_skipped(cfg, shape_name)
+    if why:
+        record = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+                  "status": "skipped", "reason": why}
+        os.makedirs(out_dir, exist_ok=True)
+        tag = "multi" if multi_pod else "single"
+        with open(os.path.join(
+                out_dir, f"{arch}__{shape_name}__{tag}.json"), "w") as f:
+            json.dump(record, f, indent=1)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+              "chips": chips, "status": "error"}
+    try:
+        # serving cells hold bf16 weights (no optimizer state, half the
+        # param-gather wire bytes); training cells keep f32 masters.
+        params_sds, params_sh, opt_sds, opt_sh = SP.abstract_state(
+            cfg, mesh,
+            params_dtype=jnp.bfloat16 if shape.kind == "decode" else None)
+        if shape.kind in ("train", "prefill"):
+            # prefill_32k is lowered as a train_step at the prefill shape:
+            # same forward at full sequence length + backward, which is the
+            # harder (and roofline-relevant) program. A forward-only prefill
+            # variant is available in serve/.
+            batch_sds, batch_sh = SP.train_batch_specs(cfg, shape, mesh)
+            step = make_train_step(cfg, mesh, remat=True)
+            step_sds = jax.ShapeDtypeStruct((), jnp.int32)
+            jitted = jax.jit(
+                step,
+                in_shardings=(params_sh, opt_sh, batch_sh,
+                              NamedSharding(mesh, P())),
+                out_shardings=(params_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+            with mesh:
+                lowered = jitted.lower(params_sds, opt_sds, batch_sds,
+                                       step_sds)
+        else:
+            mode = SP.decode_mode_for(cfg, shape)
+            record["decode_mode"] = mode
+            token, token_sh, caches, caches_sh, cross, cross_sh = \
+                SP.decode_inputs_specs(cfg, shape, mesh, mode=mode)
+            step = make_serve_step(cfg, mesh)
+            if cross is not None:
+                jitted = jax.jit(step, in_shardings=(
+                    params_sh, token_sh, caches_sh, cross_sh),
+                    donate_argnums=(2,))
+                args = (params_sds, token, caches, cross)
+            else:
+                jitted = jax.jit(step, in_shardings=(
+                    params_sh, token_sh, caches_sh), donate_argnums=(2,))
+                args = (params_sds, token, caches)
+            with mesh:
+                lowered = jitted.lower(*args)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(
+                    mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:  # CPU backend may not implement it
+            mem_rec = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        # persist the optimized HLO so analysis is re-runnable offline
+        import gzip
+        os.makedirs(out_dir, exist_ok=True)
+        tag_ = "multi" if multi_pod else "single"
+        with gzip.open(os.path.join(
+                out_dir, f"{arch}__{shape_name}__{tag_}.hlo.gz"), "wt") as f:
+            f.write(hlo)
+        # loop-aware static analysis (XLA cost_analysis counts while bodies
+        # once; our analyzer scales by known_trip_count)
+        corrected = hlo_cost.analyze_text(hlo)
+
+        flops = float(corrected["flops"])
+        hbm_bytes = float(corrected["hbm_bytes"])
+        wire_bytes = float(corrected["wire_bytes"])
+        terms = hlo_analysis.roofline_terms(flops, hbm_bytes, wire_bytes,
+                                            chips)
+
+        tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode"
+                                       else 1)
+        model_flops = 6.0 * cfg.n_active_params() * tokens
+        if shape.kind == "decode":
+            model_flops = 2.0 * cfg.n_active_params() * tokens
+        record.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=flops,
+            hbm_bytes_per_device=hbm_bytes,
+            collective_counts=corrected["collective_counts"],
+            collective_wire_bytes=corrected["collective_wire_bytes"],
+            wire_bytes_total=wire_bytes,
+            xla_cost_flops=float(cost.get("flops", 0.0)),
+            xla_cost_bytes=float(cost.get("bytes accessed", 0.0)),
+            memory_analysis=mem_rec,
+            roofline=terms,
+            tokens_global=tokens,
+            model_flops_global=model_flops,
+            model_flops_per_device=model_flops / chips,
+            useful_flops_ratio=(model_flops / chips) / flops if flops else None,
+        )
+    except Exception as e:
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()
+
+    os.makedirs(out_dir, exist_ok=True)
+    tag = "multi" if multi_pod else "single"
+    path = os.path.join(out_dir, f"{arch}__{shape_name}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1, default=str)
+    return record
+
+
+def sweep(out_dir: str, multi_pod_only: bool = False,
+          force: bool = False) -> None:
+    """Run every cell in a fresh subprocess (bounded memory, isolation)."""
+    cells = []
+    for arch in sorted(all_configs()):
+        for shape in SHAPES:
+            for mp in (False, True):
+                if multi_pod_only and not mp:
+                    continue
+                cells.append((arch, shape, mp))
+    for arch, shape, mp in cells:
+        tag = "multi" if mp else "single"
+        path = os.path.join(out_dir, f"{arch}__{shape}__{tag}.json")
+        if os.path.exists(path) and not force:
+            with open(path) as f:
+                if json.load(f).get("status") in ("ok", "skipped"):
+                    print(f"[cached] {arch} {shape} {tag}")
+                    continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+               "--shape", shape, "--out", out_dir]
+        if mp:
+            cmd.append("--multi-pod")
+        print(f"[run] {arch} {shape} {tag}", flush=True)
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True)
+        dt = time.time() - t0
+        status = "?"
+        if os.path.exists(path):
+            with open(path) as f:
+                status = json.load(f).get("status")
+        print(f"      -> {status} in {dt:.0f}s", flush=True)
+        if r.returncode != 0 and status != "ok":
+            print(r.stderr[-2000:], flush=True)
+
+
+def reanalyze(out_dir: str) -> None:
+    """Recompute roofline terms from saved HLO (no recompilation)."""
+    import glob
+    import gzip
+    for path in sorted(glob.glob(os.path.join(out_dir, "*.hlo.gz"))):
+        base = path[:-len(".hlo.gz")]
+        jpath = base + ".json"
+        if not os.path.exists(jpath):
+            continue
+        with open(jpath) as f:
+            rec = json.load(f)
+        if rec.get("status") != "ok":
+            continue
+        with gzip.open(path, "rt") as f:
+            hlo = f.read()
+        corrected = hlo_cost.analyze_text(hlo)
+        flops = float(corrected["flops"])
+        hbm = float(corrected["hbm_bytes"])
+        wire = float(corrected["wire_bytes"])
+        rec.update(
+            flops_per_device=flops,
+            hbm_bytes_per_device=hbm,
+            wire_bytes_total=wire,
+            collective_counts=corrected["collective_counts"],
+            collective_wire_bytes=corrected["collective_wire_bytes"],
+            roofline=hlo_analysis.roofline_terms(flops, hbm, wire,
+                                                 rec["chips"]),
+            useful_flops_ratio=(rec["model_flops_per_device"] / flops
+                                if flops else None),
+        )
+        with open(jpath, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+        print(f"[reanalyzed] {os.path.basename(base)}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--reanalyze", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    if args.reanalyze:
+        reanalyze(args.out)
+        return
+    if args.all:
+        sweep(args.out, force=args.force)
+        return
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   out_dir=args.out)
+    slim = {k: v for k, v in rec.items() if k != "traceback"}
+    print(json.dumps(slim, indent=1, default=str))
+    if rec.get("status") == "error":
+        print(rec.get("traceback", ""), file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

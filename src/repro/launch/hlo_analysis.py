@@ -1,0 +1,112 @@
+"""HLO-text analysis: collective wire bytes + roofline terms.
+
+cost_analysis() gives FLOPs and HBM bytes; collective traffic is parsed
+from the post-SPMD optimized HLO. Wire-byte model per op (P = replica
+group size, S = summed result buffer bytes):
+
+  all-reduce        : 2 * S * (P-1)/P      (ring: reduce-scatter + all-gather)
+  all-gather        : S * (P-1)/P          (S = full gathered result)
+  reduce-scatter    : S * (P-1)            (S = scattered result shard)
+  all-to-all        : S * (P-1)/P
+  collective-permute: S
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute")
+
+
+def _buffer_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [num_groups,group_size]
+        return int(m.group(2))
+    return 2
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    buffer_bytes: dict
+    wire_bytes: dict
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+
+_OP_LINE_RE = re.compile(
+    r"=\s+(?P<type>\(?[\w\[\],{}\s]+?\)?)\s+"
+    r"(?P<op>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?[.\w]*\(")
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    counts = {op: 0 for op in _OPS}
+    buf = {op: 0.0 for op in _OPS}
+    wire = {op: 0.0 for op in _OPS}
+    for line in hlo_text.splitlines():
+        m = _OP_LINE_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue  # counted at -start
+        op = m.group("op")
+        size = _buffer_bytes(m.group("type"))
+        if size == 0:
+            continue
+        p = _group_size(line)
+        counts[op] += 1
+        buf[op] += size
+        if op == "all-reduce":
+            wire[op] += 2.0 * size * (p - 1) / p
+        elif op == "all-gather":
+            wire[op] += size * (p - 1) / p
+        elif op == "reduce-scatter":
+            wire[op] += size * (p - 1)
+        elif op == "all-to-all":
+            wire[op] += size * (p - 1) / p
+        else:  # collective-permute
+            wire[op] += size
+    return CollectiveStats(counts, buf, wire)
+
+
+def roofline_terms(flops: float, hbm_bytes: float, wire_bytes: float,
+                   chips: int, *, flops_peak: float = 197e12,
+                   hbm_bw: float = 819e9, ici_bw: float = 50e9) -> dict:
+    """Per-chip roofline seconds. flops/bytes are whole-program (the HLO is
+    the per-device SPMD program, so they are already per-chip)."""
+    compute_s = flops / flops_peak
+    memory_s = hbm_bytes / hbm_bw
+    collective_s = wire_bytes / ici_bw
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    terms["bound"] = max(terms, key=lambda k: terms[k] if k.endswith("_s") else -1)
+    terms["bound"] = max(("compute_s", "memory_s", "collective_s"),
+                         key=lambda k: terms[k])
+    return terms

@@ -1,0 +1,431 @@
+"""Loop-aware static cost analysis of optimized (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each while-loop body
+ONCE, which undercounts scanned-layer models by ~num_layers x. The
+optimized HLO carries ``backend_config={"known_trip_count":{"n":...}}`` on
+every counted loop, so we re-derive flops / HBM bytes / collective wire
+bytes with proper loop multipliers by walking the computation graph.
+
+Cost conventions (mirroring HloCostAnalysis):
+  dot        : flops = 2 * prod(result_dims) * prod(lhs contracting dims)
+  reduce     : flops = input elements
+  elementwise: flops = result elements (counted inside fusions too)
+  bytes      : per top-level op = operand buffers + result buffers
+               (fusion = the fusion op's own operands/result)
+  while      : body cost * trip_count (+ condition, negligible)
+  collectives: wire-byte model per op type (see hlo_analysis)
+
+The result is the per-device cost of the SPMD program.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALL_RE = re.compile(r"(?:calls|to_apply|body)=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_OPER_RE = re.compile(r"\(((?:%[\w.\-]+(?:, )?)*)\)")
+
+_ZERO_COST = {"parameter", "constant", "get-tuple-element", "tuple",
+              "bitcast", "after-all", "partition-id", "replica-id",
+              "iota", "rng-bit-generator"}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shapes(type_str: str):
+    out = []
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        shape = [int(d) for d in dims.split(",") if d]
+        out.append((dt, shape))
+    return out
+
+
+def _buf_bytes(type_str: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * _prod(shape)
+               for dt, shape in _shapes(type_str))
+
+
+def _elems(type_str: str) -> int:
+    return sum(_prod(shape) for _, shape in _shapes(type_str))
+
+
+def _prod(xs) -> int:
+    n = 1
+    for x in xs:
+        n *= x
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_type: str
+    operands: list
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    param_types: dict
+    ops: list
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    wire_bytes: float = 0.0
+    coll_counts: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    coll_wire: dict = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.wire_bytes += other.wire_bytes * mult
+        for c in _COLLECTIVES:
+            self.coll_counts[c] += other.coll_counts[c] * mult
+            self.coll_wire[c] += other.coll_wire[c] * mult
+
+
+_COMP_HEADER_RE = re.compile(r"^(ENTRY )?%?([\w.\-]+)\s*\((.*)\)\s*->")
+_OP_RE = re.compile(r"^\s*(ROOT )?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\(")
+
+
+def parse_module(text: str) -> tuple[dict, str]:
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                params = {}
+                for pm in re.finditer(r"([\w.\-]+):\s*([^,()]+(?:\([^)]*\))?)",
+                                      m.group(3)):
+                    params[pm.group(1)] = pm.group(2)
+                cur = Computation(m.group(2), params, [])
+                if m.group(1):
+                    entry = m.group(2)
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        _, name, rtype, kind = m.groups()
+        # operands: first parenthesized group after the op kind
+        rest = line[m.end():]
+        depth, i = 1, 0
+        while i < len(rest) and depth > 0:
+            if rest[i] == "(":
+                depth += 1
+            elif rest[i] == ")":
+                depth -= 1
+            i += 1
+        opers = re.findall(r"%([\w.\-]+)", rest[:i])
+        cur.ops.append(Op(name, kind, rtype, opers, line))
+    return comps, entry
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    return 2
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._memo: dict[str, Cost] = {}
+
+    def analyze(self) -> Cost:
+        return self._comp_cost(self.entry)
+
+    def _type_of(self, comp: Computation, opname: str) -> str:
+        for op in comp.ops:
+            if op.name == opname:
+                return op.result_type
+        return comp.param_types.get(opname, "")
+
+    def _comp_cost(self, name: str) -> Cost:
+        if name in self._memo:
+            return self._memo[name]
+        comp = self.comps.get(name)
+        total = Cost()
+        if comp is None:
+            self._memo[name] = total
+            return total
+        self._memo[name] = total  # break cycles defensively
+        for op in comp.ops:
+            total.add(self._op_cost(comp, op))
+        return total
+
+    def _op_cost(self, comp: Computation, op: Op) -> Cost:
+        c = Cost()
+        kind = op.kind
+        if kind in _ZERO_COST:
+            return c
+        if kind == "while":
+            m = _TRIP_RE.search(op.line)
+            trip = int(m.group(1)) if m else 1
+            body = _CALL_RE.search(op.line)
+            if body:
+                c.add(self._comp_cost(body.group(1)), trip)
+            return c
+        if kind in ("call", "conditional"):
+            for m in _CALL_RE.finditer(op.line):
+                c.add(self._comp_cost(m.group(1)))
+            return c
+        if kind in _COLLECTIVES or any(
+                kind == col + "-start" for col in _COLLECTIVES):
+            base = kind.replace("-start", "")
+            size = _buf_bytes(op.result_type)
+            p = _group_size(op.line)
+            c.bytes += size + sum(_buf_bytes(self._type_of(comp, o))
+                                  for o in op.operands)
+            c.coll_counts[base] += 1
+            if base == "all-reduce":
+                w = 2.0 * size * (p - 1) / p
+            elif base == "all-gather":
+                w = size * (p - 1) / p
+            elif base == "reduce-scatter":
+                w = size * (p - 1)
+            elif base == "all-to-all":
+                w = size * (p - 1) / p
+            else:
+                w = size
+            c.coll_wire[base] += w
+            c.wire_bytes += w
+            return c
+        if kind.endswith("-done"):
+            return c
+
+        # In-place / windowed ops: XLA buffer assignment aliases the big
+        # operand (scan-carried DUS, cache updates), and gathers touch only
+        # the gathered rows — charge the touched region, not the buffer.
+        if kind == "dynamic-update-slice":
+            upd = (self._type_of(comp, op.operands[1])
+                   if len(op.operands) > 1 else op.result_type)
+            c.bytes += 2 * _buf_bytes(upd)
+            return c
+        if kind in ("dynamic-slice", "slice"):
+            c.bytes += 2 * _buf_bytes(op.result_type)
+            return c
+        if kind == "gather":
+            idx = (self._type_of(comp, op.operands[1])
+                   if len(op.operands) > 1 else "")
+            c.bytes += 2 * _buf_bytes(op.result_type) + _buf_bytes(idx)
+            return c
+        if kind == "scatter":
+            upd = (self._type_of(comp, op.operands[2])
+                   if len(op.operands) > 2 else op.result_type)
+            idx = (self._type_of(comp, op.operands[1])
+                   if len(op.operands) > 1 else "")
+            c.bytes += 3 * _buf_bytes(upd) + _buf_bytes(idx)
+            return c
+        if kind == "fusion":
+            c.bytes += self._fusion_bytes(op)
+            c.flops += self._fusion_flops(self._called(op))
+            return c
+
+        # generic op: bytes = operands + result
+        c.bytes += _buf_bytes(op.result_type)
+        c.bytes += sum(_buf_bytes(self._type_of(comp, o))
+                       for o in op.operands)
+
+        if kind == "dot":
+            lhs_type = self._type_of(comp, op.operands[0]) if op.operands else ""
+            shapes = _shapes(lhs_type)
+            cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+            csize = 1
+            if shapes and cdims and cdims.group(1):
+                lhs_shape = shapes[0][1]
+                for d in cdims.group(1).split(","):
+                    di = int(d)
+                    if di < len(lhs_shape):
+                        csize *= lhs_shape[di]
+            c.flops += 2.0 * _elems(op.result_type) * csize
+        elif kind == "fusion":
+            m = _CALL_RE.search(op.line)
+            if m:
+                inner = self._fusion_flops(m.group(1))
+                c.flops += inner
+        elif kind == "reduce":
+            c.flops += sum(_elems(self._type_of(comp, o))
+                           for o in op.operands[:max(1, len(op.operands) // 2)])
+        elif kind in ("sort", "scatter", "gather", "dynamic-slice",
+                      "dynamic-update-slice", "copy", "transpose",
+                      "broadcast", "reshape", "slice", "concatenate",
+                      "reverse", "pad", "convert", "reduce-window",
+                      "select-and-scatter", "custom-call", "rng"):
+            pass  # bytes-only
+        else:
+            # elementwise-ish default
+            c.flops += _elems(op.result_type)
+        return c
+
+    def _called(self, op: Op) -> str:
+        m = _CALL_RE.search(op.line)
+        return m.group(1) if m else ""
+
+    def _fusion_bytes(self, op: Op) -> float:
+        """Traffic of one fusion call: parameters consumed only through
+        (dynamic-)slice/gather ops inside the fused computation are charged
+        at the slice size; other parameters at full size; the write side is
+        the root's update size for DUS roots, else the fusion result."""
+        fused = self.comps.get(self._called(op))
+        if fused is None:
+            return _buf_bytes(op.result_type)
+        producers = {o.name: o for o in fused.ops}
+
+        def trace_param(name: str, depth: int = 0) -> str | None:
+            if depth > 8:
+                return None
+            o = producers.get(name)
+            if o is None:
+                # not an op -> must be a computation parameter
+                return name if name in fused.param_types else None
+            if o.kind == "parameter":
+                return o.name
+            if o.kind in ("bitcast", "convert", "copy", "reshape",
+                          "transpose"):
+                return trace_param(o.operands[0], depth + 1) \
+                    if o.operands else None
+            return None
+
+        sliced: dict[str, float] = {}
+        for o in fused.ops:
+            if o.kind in ("dynamic-slice", "slice", "gather") and o.operands:
+                base = trace_param(o.operands[0])
+                if base is not None:
+                    sliced[base] = sliced.get(base, 0.0) \
+                        + _buf_bytes(o.result_type)
+        reads = 0.0
+        for pname, ptype in fused.param_types.items():
+            reads += sliced.get(pname, None) if pname in sliced \
+                else _buf_bytes(ptype)
+        root = self._fusion_root(op)
+        if root is not None and root.kind == "dynamic-update-slice" \
+                and len(root.operands) > 1:
+            write = 2.0 * _buf_bytes(self._type_of(fused, root.operands[1]))
+        else:
+            write = _buf_bytes(op.result_type)
+        return reads + write
+
+    def _fusion_root(self, op: Op) -> Op | None:
+        comp = self.comps.get(self._called(op))
+        if comp is None or not comp.ops:
+            return None
+        for o in comp.ops:
+            if o.line.strip().startswith("ROOT"):
+                return o
+        return comp.ops[-1]
+
+    def _fusion_flops(self, name: str) -> float:
+        comp = self.comps.get(name)
+        if comp is None:
+            return 0.0
+        flops = 0.0
+        for op in comp.ops:
+            if op.kind in _ZERO_COST or op.kind in (
+                    "copy", "transpose", "broadcast", "reshape", "slice",
+                    "concatenate", "pad", "reverse", "bitcast", "convert",
+                    "dynamic-slice", "dynamic-update-slice", "gather",
+                    "scatter"):
+                continue
+            if op.kind == "dot":
+                lhs_type = self._type_of(comp, op.operands[0]) \
+                    if op.operands else ""
+                shapes = _shapes(lhs_type)
+                cdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}",
+                                  op.line)
+                csize = 1
+                if shapes and cdims and cdims.group(1):
+                    lhs_shape = shapes[0][1]
+                    for d in cdims.group(1).split(","):
+                        di = int(d)
+                        if di < len(lhs_shape):
+                            csize *= lhs_shape[di]
+                flops += 2.0 * _elems(op.result_type) * csize
+            elif op.kind == "reduce":
+                flops += sum(_elems(self._type_of(comp, o))
+                             for o in op.operands[:max(1, len(op.operands) // 2)])
+            elif op.kind == "fusion":
+                m = _CALL_RE.search(op.line)
+                if m:
+                    flops += self._fusion_flops(m.group(1))
+            else:
+                flops += _elems(op.result_type)
+        return flops
+
+
+def analyze_text(text: str) -> dict:
+    cost = HloCost(text).analyze()
+    return {
+        "flops": cost.flops,
+        "hbm_bytes": cost.bytes,
+        "wire_bytes": cost.wire_bytes,
+        "collective_counts": cost.coll_counts,
+        "collective_wire_bytes": cost.coll_wire,
+    }
+
+
+def attribute_bytes(text: str, top: int = 20) -> list[tuple[str, float, float]]:
+    """Per-op-kind (bytes, flops) attribution with loop multipliers — the
+    'profile' used by the §Perf hillclimb to find the dominant traffic."""
+    hc = HloCost(text)
+    from collections import Counter
+    bybytes: Counter = Counter()
+    byflops: Counter = Counter()
+
+    def walk(comp_name: str, mult: float):
+        comp = hc.comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            if op.kind == "while":
+                m = _TRIP_RE.search(op.line)
+                trip = int(m.group(1)) if m else 1
+                body = _CALL_RE.search(op.line)
+                if body:
+                    walk(body.group(1), mult * trip)
+                continue
+            if op.kind in ("call", "conditional"):
+                for m in _CALL_RE.finditer(op.line):
+                    walk(m.group(1), mult)
+                continue
+            c = hc._op_cost(comp, op)
+            label = op.kind
+            if op.kind == "fusion":
+                root = hc._fusion_root(op)
+                label = f"fusion:{root.kind if root else '?'}"
+            bybytes[label] += c.bytes * mult
+            byflops[label] += c.flops * mult
+
+    walk(hc.entry, 1.0)
+    return [(k, v, byflops[k]) for k, v in bybytes.most_common(top)]

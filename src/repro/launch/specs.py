@@ -1,0 +1,211 @@
+"""Abstract input construction + logical sharding specs for the dry-run
+and launchers: parameters, optimizer state, batches, and decode caches as
+ShapeDtypeStructs (never materialized) with mesh-resolved shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.utils import sharding as shd
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# logical specs for batches and caches
+# ---------------------------------------------------------------------------
+
+BATCH_SPECS = {
+    "tokens": ("dp", None),
+    "labels": ("dp", None),
+    "frontend": ("dp", None, None),
+}
+
+def _cache_leaf_specs(kv_heads_shardable: bool) -> dict:
+    """Cache specs (without the leading stacked-groups dim).
+
+    When kv_heads divides the model axis we put the model axis on heads
+    (classic TP decode); otherwise we split the *sequence / cluster-
+    capacity* dimension over the model axis (flash-decoding-style split-KV)
+    so GQA archs with few KV heads (starcoder2 kv=2, llama3 kv=8) still
+    shard their caches 256-way.
+    """
+    if kv_heads_shardable:
+        return {
+            "k": ("dp", None, "tp", None),
+            "v": ("dp", None, "tp", None),
+            "centroids": ("dp", "tp", "sp", None),
+            "bk": ("dp", "tp", "sp", None, None),
+            "bv": ("dp", "tp", "sp", None, None),
+            "bcount": ("dp", "tp", "sp"),
+            "recent_k": ("dp", "tp", None, None),
+            "recent_v": ("dp", "tp", None, None),
+            "append_k": ("dp", None, "tp", None),
+            "append_v": ("dp", None, "tp", None),
+            "latent": ("dp", "mdl", None),
+            "k_rope": ("dp", "mdl", None),
+            "ssm": ("dp", "tp", None, None),
+            "conv": ("dp", None, "tp"),
+        }
+    return {
+        "k": ("dp", "mdl", None, None),
+        "v": ("dp", "mdl", None, None),
+        # clustered cache (§Perf clustered/H4): clusters over the data axis,
+        # head_dim over the model axis — the top-bucket gather then moves
+        # only bf16 hd-slices across data ranks, and the attention
+        # contraction over hd reduces with a tiny cross-model psum instead
+        # of an f32 bucket all-gather.
+        "centroids": ("dp", None, "sp", "mdl"),
+        "bk": ("dp", None, "sp", None, "mdl"),
+        "bv": ("dp", None, "sp", None, "mdl"),
+        "bcount": ("dp", None, "sp"),
+        "recent_k": ("dp", None, None, "mdl"),
+        "recent_v": ("dp", None, None, "mdl"),
+        "append_k": ("dp", None, None, None),
+        "append_v": ("dp", None, None, None),
+        "latent": ("dp", "mdl", None),
+        "k_rope": ("dp", "mdl", None),
+        "ssm": ("dp", "tp", None, None),
+        "conv": ("dp", None, "tp"),
+    }
+
+
+def _leaf_name(path) -> str:
+    for entry in reversed(path):
+        if isinstance(entry, jax.tree_util.DictKey):
+            return entry.key
+    return ""
+
+
+def cache_logical_specs(cache_tree: Any,
+                        kv_heads_shardable: bool = True) -> Any:
+    """Logical spec tree matching a (stacked-groups) cache pytree."""
+    table = _cache_leaf_specs(kv_heads_shardable)
+
+    def spec(path, leaf):
+        name = _leaf_name(path)
+        nd = leaf.ndim
+        base = table.get(name)
+        if base is not None and len(base) == nd - 1:
+            return (None, *base)
+        if nd <= 1:
+            return (None,) * nd
+        # default: (groups, batch, ...) -> shard batch on dp
+        return (None, "dp") + (None,) * (nd - 2)
+
+    return jax.tree_util.tree_map_with_path(spec, cache_tree)
+
+
+def resolve(logical_tree: Any, shape_tree: Any, mesh: Mesh) -> Any:
+    rules = shd.rules_for_mesh(mesh)
+    return jax.tree_util.tree_map(
+        lambda spec, leaf: NamedSharding(
+            mesh, shd.resolve_spec(spec, leaf.shape, mesh, rules)),
+        logical_tree, shape_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+# ---------------------------------------------------------------------------
+# abstract model state
+# ---------------------------------------------------------------------------
+
+def abstract_state(cfg: ArchConfig, mesh: Mesh, *, max_pos: int = 32768,
+                   with_opt: bool = True, params_dtype=None):
+    """ShapeDtypeStructs + shardings for params (and AdamW state).
+
+    ``params_dtype``: override the stored parameter dtype (serving uses
+    bf16 weights so FSDP gathers move half the bytes — §Perf decode/H2)."""
+    # Trace init (no allocation) for shapes; the logical spec tree is
+    # built as a python side effect during the same trace.
+    captured = {}
+
+    def build(k):
+        p, s = M.init_model(k, cfg, max_pos=max_pos)
+        captured["specs"] = s
+        return p
+
+    params_shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    specs = captured["specs"]
+    if params_dtype is not None:
+        params_shapes = jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape, params_dtype
+                if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype),
+            params_shapes)
+    shardings = resolve(specs, params_shapes, mesh)
+    if not with_opt:
+        return params_shapes, shardings
+    opt_shapes = {
+        "m": params_shapes, "v": params_shapes,
+        "count": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    opt_shardings = {
+        "m": shardings, "v": shardings,
+        "count": NamedSharding(mesh, P()),
+    }
+    return params_shapes, shardings, opt_shapes, opt_shardings
+
+
+# ---------------------------------------------------------------------------
+# abstract batches / caches per shape cell
+# ---------------------------------------------------------------------------
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh):
+    b, s = shape.global_batch, shape.seq_len
+    batch = {}
+    s_text = s
+    if cfg.frontend and cfg.family != "audio":
+        s_text = s - cfg.frontend_seq
+    batch["tokens"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    batch["labels"] = jax.ShapeDtypeStruct((b, s_text), jnp.int32)
+    if cfg.frontend:
+        batch["frontend"] = jax.ShapeDtypeStruct(
+            (b, cfg.frontend_seq, cfg.d_model), jnp.float32)
+    logical = {k: BATCH_SPECS[k] for k in batch}
+    return batch, resolve(logical, batch, mesh)
+
+
+def decode_inputs_specs(cfg: ArchConfig, shape: ShapeSpec, mesh: Mesh, *,
+                        mode: str, dtype=jnp.bfloat16):
+    """(token, caches, cross_kv) ShapeDtypeStructs + shardings."""
+    b, s = shape.global_batch, shape.seq_len
+    token = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    token_sh = NamedSharding(mesh, shd.resolve_spec(("dp", None),
+                                                    (b, 1), mesh))
+    caches = jax.eval_shape(
+        lambda: M.init_decode_caches(cfg, b, s, mode=mode, dtype=dtype))
+    kv_shardable = cfg.num_kv_heads % mesh.shape["model"] == 0
+    cache_sh = resolve(cache_logical_specs(caches, kv_shardable), caches,
+                       mesh)
+
+    cross = cross_sh = None
+    if cfg.cross_attention:
+        subs, n_groups = T.group_layout(cfg)
+        hd = cfg.resolved_head_dim
+        cross = {f"{i}_{sub}": {
+            "k": jax.ShapeDtypeStruct(
+                (n_groups, b, cfg.frontend_seq, cfg.num_kv_heads, hd), dtype),
+            "v": jax.ShapeDtypeStruct(
+                (n_groups, b, cfg.frontend_seq, cfg.num_kv_heads, hd), dtype),
+        } for i, sub in enumerate(subs)}
+        cross_sh = resolve(cache_logical_specs(cross), cross, mesh)
+    return token, token_sh, caches, cache_sh, cross, cross_sh
+
+
+def decode_mode_for(cfg: ArchConfig, shape: ShapeSpec) -> str:
+    """dense cache for decode_32k; clustered (kmeans) for long_500k on
+    attention archs (recurrent archs keep their state caches)."""
+    if shape.name != "long_500k":
+        return "dense"
+    if cfg.family == "ssm":
+        return "dense"            # pure recurrent states
+    return "clustered"

@@ -1,0 +1,186 @@
+"""Shared building blocks for the model substrate.
+
+Convention: every layer is an (init, apply) pair. ``init_*`` returns
+``(params, specs)`` — two parallel pytrees, where each spec leaf is a tuple
+of *logical* axis names per dim (see utils.sharding). ``apply_*`` takes a
+``Ctx`` carrying the mesh + compute dtype and threads sharding constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils import sharding as shd
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Ctx:
+    """Per-call context: physical mesh + dtype policy."""
+    mesh: Any = None                      # jax.sharding.Mesh | None
+    compute_dtype: Any = jnp.bfloat16
+    rules: dict | None = None
+
+    def cast(self, x: Array) -> Array:
+        return x.astype(self.compute_dtype)
+
+    def constrain(self, x: Array, *logical):
+        if self.mesh is None:
+            return x
+        return shd.constrain(x, self.mesh, *logical, rules=self.rules)
+
+
+def dense_init(key, d_in: int, d_out: int, *, spec=("fsdp", "tp"),
+               scale: float | None = None):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+    return {"w": w}, {"w": spec}
+
+
+def dense(params, x: Array, ctx: Ctx) -> Array:
+    return x @ ctx.cast(params["w"])
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def rmsnorm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": (None,)}
+
+
+def rmsnorm(params, x: Array, ctx: Ctx, *, eps: float = 1e-6,
+            plus_one: bool = False) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    s = params["scale"]
+    if plus_one:   # gemma-style (1 + scale)
+        s = 1.0 + s
+    return (y * s).astype(x.dtype)
+
+
+def layernorm_init(d: int):
+    return ({"scale": jnp.ones((d,), jnp.float32),
+             "bias": jnp.zeros((d,), jnp.float32)},
+            {"scale": (None,), "bias": (None,)})
+
+
+def layernorm(params, x: Array, ctx: Ctx, *, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def make_norm(kind: str, d: int):
+    if kind == "rmsnorm":
+        return rmsnorm_init(d), rmsnorm
+    if kind == "rmsnorm_1p":
+        p, s = rmsnorm_init(d)
+        p["scale"] = jnp.zeros((d,), jnp.float32)
+        def apply(params, x, ctx):
+            return rmsnorm(params, x, ctx, plus_one=True)
+        return (p, s), apply
+    if kind == "layernorm":
+        return layernorm_init(d), layernorm
+    raise ValueError(kind)
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, *, theta: float = 10000.0) -> Array:
+    """x: (..., S, head_dim); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLPs
+# --------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, *, kind: str = "glu"):
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "glu":
+        params = {
+            "w_gate": jax.random.normal(k1, (d, d_ff), jnp.float32) * d**-0.5,
+            "w_up": jax.random.normal(k2, (d, d_ff), jnp.float32) * d**-0.5,
+            "w_down": jax.random.normal(k3, (d_ff, d), jnp.float32) * d_ff**-0.5,
+        }
+        specs = {"w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+                 "w_down": ("tp", "fsdp")}
+    elif kind == "plain":
+        params = {
+            "w_up": jax.random.normal(k1, (d, d_ff), jnp.float32) * d**-0.5,
+            "b_up": jnp.zeros((d_ff,), jnp.float32),
+            "w_down": jax.random.normal(k2, (d_ff, d), jnp.float32) * d_ff**-0.5,
+            "b_down": jnp.zeros((d,), jnp.float32),
+        }
+        specs = {"w_up": ("fsdp", "tp"), "b_up": ("tp",),
+                 "w_down": ("tp", "fsdp"), "b_down": (None,)}
+    else:
+        raise ValueError(kind)
+    return params, specs
+
+
+def _act(name: str, x: Array) -> Array:
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name in ("gelu", "gelu_tanh"):
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def mlp(params, x: Array, ctx: Ctx, *, kind: str = "glu",
+        act: str = "silu") -> Array:
+    if kind == "glu":
+        h = _act(act, x @ ctx.cast(params["w_gate"])) * (x @ ctx.cast(params["w_up"]))
+        h = ctx.constrain(h, "dp", None, "tp")
+        return h @ ctx.cast(params["w_down"])
+    h = _act(act, x @ ctx.cast(params["w_up"]) + ctx.cast(params["b_up"]))
+    h = ctx.constrain(h, "dp", None, "tp")
+    return h @ ctx.cast(params["w_down"]) + ctx.cast(params["b_down"])
+
+
+# --------------------------------------------------------------------------
+# Embeddings / LM head
+# --------------------------------------------------------------------------
+
+def round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def embed_init(key, vocab_padded: int, d: int):
+    w = jax.random.normal(key, (vocab_padded, d), jnp.float32) * 0.02
+    return {"embedding": w}, {"embedding": ("tp", "fsdp")}
+
+
+def embed(params, tokens: Array, ctx: Ctx) -> Array:
+    return ctx.cast(jnp.take(params["embedding"], tokens, axis=0))
+
+
+def unembed(params, x: Array, ctx: Ctx, *, softcap: float | None = None
+            ) -> Array:
+    """Logits over the padded vocab, f32."""
+    logits = jnp.einsum("...d,vd->...v", x,
+                        ctx.cast(params["embedding"])).astype(jnp.float32)
+    if softcap is not None:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return logits

@@ -1,0 +1,299 @@
+"""k-means-powered attention — the paper's technique as a model feature.
+
+Two pieces:
+
+1. ``build_clustered_cache`` — run flash-kmeans over the cached keys of
+   each (batch, kv_head) and reorganize the KV cache into cluster buckets
+   (sorted-by-cluster layout — the same sort-inverse restructuring as the
+   update kernel, applied to the KV cache). O(S·Kc·d) one-time cost.
+
+2. ``clustered_decode_attention`` — a decode step scores the query against
+   the Kc centroids (O(Kc·d)), gathers only the top-p clusters' buckets
+   plus a small always-attended recent buffer, and performs exact softmax
+   attention *within the selected set* (ClusterKV / Tactic style). Per-step
+   cost drops from O(S·d) to O((top·cap + R)·d) — this is what makes the
+   ``long_500k`` decode cells tractable for dense-attention architectures.
+
+Cluster selection is per (batch, kv_head) — queries in a GQA group share
+the selection (keeps the gather at cache granularity; mean-pooled query
+group scores the centroids).
+
+Approximation note: the k-means itself is exact Lloyd (paper contract);
+the *sparse attention built on it* is approximate by design, like every
+cluster-routed attention in the literature. Bucket overflow beyond
+``capacity`` is dropped (capacity_factor controls slack).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.kmeans import KMeansConfig, make_kmeans_fn
+from repro.models.layers.attention import NEG_INF
+
+Array = jax.Array
+
+
+def cluster_keys(keys: Array, kc: int, *, iters: int = 5,
+                 interpret: bool | None = None, seed: int = 0,
+                 impl: str = "flash") -> tuple[Array, Array]:
+    """flash-kmeans over one head's keys. keys: (S, hd) ->
+    (centroids (kc, hd), assignments (S,)).
+
+    ``impl="ref"`` uses the pure-jnp dataflow — needed when the call sits
+    under grad-of-scan-of-vmap (train-time routing), where the Pallas
+    interpreter lacks batching/differentiation rules. Routing is discrete,
+    so no gradient flows through the clustering either way."""
+    cfg = KMeansConfig(k=kc, max_iters=iters, init="random",
+                       interpret=interpret, assign_impl=impl,
+                       update_impl="sort_inverse" if impl == "flash"
+                       else "scatter")
+    fit = make_kmeans_fn(cfg)
+    st = fit(jax.random.PRNGKey(seed), keys.astype(jnp.float32))
+    return st.centroids.astype(keys.dtype), st.assignments
+
+
+def _bucketize(values: Array, assign: Array, kc: int, cap: int) -> tuple[Array, Array]:
+    """Scatter (S, ...) rows into (kc, cap, ...) buckets by cluster id.
+
+    Sorted-by-cluster order (argsort) => per-cluster slot index is just
+    rank-within-segment; overflow rows (slot >= cap) are dropped.
+    Returns (buckets, counts)."""
+    s = assign.shape[0]
+    order = jnp.argsort(assign)
+    a_sorted = assign[order]
+    v_sorted = values[order]
+    counts = jnp.bincount(assign, length=kc)
+    starts = jnp.cumsum(counts) - counts                     # (kc,)
+    slot = jnp.arange(s) - starts[a_sorted]                  # rank in segment
+    buckets = jnp.zeros((kc, cap) + values.shape[1:], values.dtype)
+    buckets = buckets.at[a_sorted, slot].set(v_sorted, mode="drop")
+    return buckets, jnp.minimum(counts, cap).astype(jnp.int32)
+
+
+def build_clustered_cache(k_cache: Array, v_cache: Array, *, kc: int,
+                          capacity: int, iters: int = 5,
+                          interpret: bool | None = None) -> dict:
+    """k/v: (B, S, KH, hd) (keys already roped) -> clustered cache dict."""
+    b, s, kh, hd = k_cache.shape
+    kt = jnp.moveaxis(k_cache, 2, 1).reshape(b * kh, s, hd)
+    vt = jnp.moveaxis(v_cache, 2, 1).reshape(b * kh, s, hd)
+
+    cents, assigns = jax.vmap(
+        functools.partial(cluster_keys, kc=kc, iters=iters,
+                          interpret=interpret))(kt)
+
+    bk, counts = jax.vmap(
+        functools.partial(_bucketize, kc=kc, cap=capacity))(kt, assigns)
+    bv, _ = jax.vmap(
+        functools.partial(_bucketize, kc=kc, cap=capacity))(vt, assigns)
+
+    def r(x, extra):
+        return x.reshape(b, kh, *extra)
+
+    return {
+        "centroids": r(cents, (kc, hd)),
+        "bk": r(bk, (kc, capacity, hd)),
+        "bv": r(bv, (kc, capacity, hd)),
+        "bcount": r(counts, (kc,)),
+    }
+
+
+def init_clustered_cache(batch: int, kv_heads: int, head_dim: int, *,
+                         kc: int, capacity: int, recent: int,
+                         dtype=jnp.bfloat16) -> dict:
+    """Zero cache with the clustered layout (for dry-run input specs)."""
+    return {
+        "centroids": jnp.zeros((batch, kv_heads, kc, head_dim), dtype),
+        "bk": jnp.zeros((batch, kv_heads, kc, capacity, head_dim), dtype),
+        "bv": jnp.zeros((batch, kv_heads, kc, capacity, head_dim), dtype),
+        "bcount": jnp.zeros((batch, kv_heads, kc), jnp.int32),
+        "recent_k": jnp.zeros((batch, kv_heads, recent, head_dim), dtype),
+        "recent_v": jnp.zeros((batch, kv_heads, recent, head_dim), dtype),
+        "rlen": jnp.zeros((), jnp.int32),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def _attention_stats(scores: Array, v: Array, eq: str):
+    """Unnormalized attention pieces for two-pass logsumexp merging.
+
+    scores: (..., q, T) masked with NEG_INF; v: (..., T, hd); ``eq`` is the
+    weights@values einsum (e.g. "zqk,zkd->zqd").
+    Returns (acc (..., q, hd), m (..., q), l (..., q))."""
+    m = jnp.max(scores, axis=-1)
+    p = jnp.exp(scores - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    acc = jnp.einsum(eq, p, v)
+    return acc, m, l
+
+
+def _merge_stats(a1, m1, l1, a2, m2, l2):
+    m = jnp.maximum(m1, m2)
+    w1 = jnp.exp(m1 - m)
+    w2 = jnp.exp(m2 - m)
+    denom = l1 * w1 + l2 * w2
+    out = (a1 * w1[..., None] + a2 * w2[..., None]) \
+        / jnp.maximum(denom, 1e-30)[..., None]
+    return out
+
+
+def kmeans_routed_attention(q: Array, k: Array, v: Array, *, clusters: int,
+                            window: int = 128, capacity_factor: float = 2.0,
+                            kmeans_iters: int = 4, scale=None,
+                            interpret: bool | None = None,
+                            impl: str = "flash") -> Array:
+    """Cluster-routed causal self-attention (Routing-Transformer style,
+    the paper's train-time online-kmeans workload).
+
+    Keys are clustered per (batch, head) with flash-kmeans; each query
+    attends exactly to (a) its local window and (b) the same-cluster keys
+    *outside* the window — a disjoint union, merged with a two-pass
+    logsumexp, so with ``clusters=1`` this reproduces full attention
+    bit-for-bit (tested). Per-cluster buckets have a fixed capacity;
+    overflow tokens keep window coverage only.
+
+    q,k,v: (B, S, H, hd) (same #heads; GQA-expand before calling).
+    Complexity: O(S·window + S·cap) vs O(S^2).
+    """
+    b, s, h, hd = q.shape
+    scale_ = scale if scale is not None else hd ** -0.5
+    cap = max(8, int(s / clusters * capacity_factor))
+
+    qf = jnp.moveaxis(q, 2, 1).reshape(b * h, s, hd)
+    kf = jnp.moveaxis(k, 2, 1).reshape(b * h, s, hd)
+    vf = jnp.moveaxis(v, 2, 1).reshape(b * h, s, hd)
+
+    # ---- window pass (dense, banded) ------------------------------------
+    pos = jnp.arange(s)
+    win_mask = ((pos[None, :] <= pos[:, None])
+                & (pos[None, :] > pos[:, None] - window))       # (S, S)
+    scores_w = jnp.einsum("zqd,zkd->zqk", qf, kf) * scale_
+    scores_w = jnp.where(win_mask[None], scores_w, NEG_INF)
+    acc_w, m_w, l_w = _attention_stats(scores_w, vf, "zqk,zkd->zqd")
+
+    # ---- cluster pass ----------------------------------------------------
+    def one(qh, kh_, vh):
+        kh_sg = jax.lax.stop_gradient(kh_)
+        cents, ak = cluster_keys(kh_sg, clusters, iters=kmeans_iters,
+                                 interpret=interpret, impl=impl)
+        from repro.kernels import ops as kops, ref as kref
+        qsg = jax.lax.stop_gradient(qh).astype(jnp.float32)
+        if impl == "flash":
+            aq, _ = kops.flash_assign(qsg, cents.astype(jnp.float32),
+                                      interpret=interpret)
+        else:
+            aq, _ = kref.assign_ref(qsg, cents.astype(jnp.float32))
+        # bucket keys/values/positions by key-cluster
+        bk, _ = _bucketize(kh_, ak, clusters, cap)             # (C,cap,hd)
+        bv, _ = _bucketize(vh, ak, clusters, cap)
+        bpos, _ = _bucketize(pos[:, None], ak, clusters, cap)  # (C,cap,1)
+        bcnt = jnp.minimum(jnp.bincount(ak, length=clusters), cap)
+        # bucket queries by their assigned cluster
+        bq, _ = _bucketize(qh, aq, clusters, cap)
+        bqpos, _ = _bucketize(pos[:, None], aq, clusters, cap)
+        qcnt = jnp.minimum(jnp.bincount(aq, length=clusters), cap)
+        sc = jnp.einsum("cqd,ckd->cqk", bq, bk) * scale_       # (C,cap,cap)
+        qp, kp = bqpos[..., 0], bpos[..., 0]
+        mask = (kp[:, None, :] <= qp[:, :, None])              # causal
+        mask &= (kp[:, None, :] <= qp[:, :, None] - window)    # disjoint w/ window
+        mask &= (jnp.arange(cap)[None, None, :] < bcnt[:, None, None])
+        mask &= (jnp.arange(cap)[None, :, None] < qcnt[:, None, None])
+        sc = jnp.where(mask, sc, NEG_INF)
+        acc_c, m_c, l_c = _attention_stats(sc, bv, "cqk,ckd->cqd")  # (C,cap,hd)
+        # scatter back to original query positions
+        order = jnp.argsort(aq)
+        slot_of = jnp.zeros((s,), jnp.int32)
+        counts = jnp.bincount(aq, length=clusters)
+        starts = jnp.cumsum(counts) - counts
+        rank = jnp.arange(s) - starts[aq[order]]
+        # (cluster, rank) of each original index
+        acc_o = jnp.zeros((s, hd), acc_c.dtype)
+        m_o = jnp.full((s,), NEG_INF, m_c.dtype)
+        l_o = jnp.zeros((s,), l_c.dtype)
+        valid = rank < cap
+        src = (aq[order], jnp.minimum(rank, cap - 1))
+        acc_o = acc_o.at[order].set(
+            jnp.where(valid[:, None], acc_c[src], 0.0))
+        m_o = m_o.at[order].set(jnp.where(valid, m_c[src], NEG_INF))
+        l_o = l_o.at[order].set(jnp.where(valid, l_c[src], 0.0))
+        return acc_o, m_o, l_o
+
+    acc_c, m_c, l_c = jax.vmap(one)(qf, kf, vf)
+
+    out = _merge_stats(acc_w, m_w, l_w, acc_c, m_c, l_c)       # (BH,S,hd)
+    return jnp.moveaxis(out.reshape(b, h, s, hd), 1, 2).astype(q.dtype)
+
+
+def clustered_decode_attention(q: Array, k_new: Array, v_new: Array,
+                               cache: dict, *, top: int,
+                               softcap: float | None = None,
+                               scale: float | None = None
+                               ) -> tuple[Array, dict]:
+    """One decode step against a clustered cache.
+
+    q: (B, 1, H, hd) (already roped); k_new/v_new: (B, 1, KH, hd) — the
+    current token's key/value, appended to the recent buffer.
+    Returns (out (B, 1, H, hd), new_cache)."""
+    b, _, h, hd = q.shape
+    kh = k_new.shape[2]
+    g = h // kh
+    scale_ = scale if scale is not None else hd ** -0.5
+
+    # append new kv to the recent ring
+    rlen = cache["rlen"]
+    rk = jax.lax.dynamic_update_slice_in_dim(
+        cache["recent_k"], jnp.moveaxis(k_new, 1, 2).astype(
+            cache["recent_k"].dtype), rlen, axis=2)
+    rv = jax.lax.dynamic_update_slice_in_dim(
+        cache["recent_v"], jnp.moveaxis(v_new, 1, 2).astype(
+            cache["recent_v"].dtype), rlen, axis=2)
+    r = rk.shape[2]
+
+    qg = q.reshape(b, kh, g, hd)                             # group per kv head
+
+    # 1) score centroids: O(Kc . hd) — mean over the query group.
+    # bf16 operands + f32 accumulation (preferred_element_type) so any
+    # cross-shard movement of centroids stays bf16 on the wire (§Perf
+    # clustered/H2).
+    cents = cache["centroids"]                               # (B,KH,Kc,hd)
+    cscores = jnp.einsum("bkgd,bkcd->bkgc", qg.astype(cents.dtype), cents,
+                         preferred_element_type=jnp.float32)
+    csel = jnp.mean(cscores, axis=2)                         # (B,KH,Kc)
+    _, top_idx = jax.lax.top_k(csel, top)                    # (B,KH,top)
+
+    # 2) gather only the selected buckets
+    def take(x):                                             # (B,KH,Kc,...) ->
+        return jnp.take_along_axis(
+            x, top_idx.reshape(b, kh, top, *([1] * (x.ndim - 3))), axis=2)
+
+    gk = take(cache["bk"])                                   # (B,KH,top,cap,hd)
+    gv = take(cache["bv"])
+    gcnt = take(cache["bcount"])                             # (B,KH,top)
+    cap = gk.shape[3]
+    gk = gk.reshape(b, kh, top * cap, hd)
+    gv = gv.reshape(b, kh, top * cap, hd)
+
+    # 3) exact attention over [selected buckets ++ recent buffer]
+    keys = jnp.concatenate([gk, rk], axis=2)                 # (B,KH,T,hd)
+    vals = jnp.concatenate([gv, rv], axis=2)
+    scores = jnp.einsum("bkgd,bktd->bkgt", qg.astype(keys.dtype), keys,
+                        preferred_element_type=jnp.float32)
+    scores = scores * scale_
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    slot = jnp.arange(cap)
+    bucket_valid = (slot[None, None, None] < gcnt[..., None])  # (B,KH,top,cap)
+    recent_valid = jnp.arange(r)[None, None] <= rlen           # incl. new token
+    recent_valid = jnp.broadcast_to(recent_valid, (b, kh, r))
+    valid = jnp.concatenate(
+        [bucket_valid.reshape(b, kh, top * cap), recent_valid], axis=2)
+    scores = jnp.where(valid[:, :, None, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(vals.dtype)
+    out = jnp.einsum("bkgt,bktd->bkgd", w, vals)
+
+    new_cache = dict(cache, recent_k=rk, recent_v=rv, rlen=rlen + 1,
+                     pos=cache["pos"] + 1)
+    return out.reshape(b, 1, h, hd), new_cache

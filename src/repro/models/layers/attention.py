@@ -1,0 +1,276 @@
+"""Attention: GQA/MHA with RoPE, sliding-window + logit softcap variants,
+cross-attention, KV-cache decode, and a chunked online-softmax path so
+32k-token prefill never materializes the (S, S) score matrix.
+
+The chunked path is pure JAX (lax.scan over KV blocks with running
+(max, sum, acc) state — the FlashAttention recurrence at the XLA level).
+It is differentiable and composes with remat; the paper's Pallas budget is
+reserved for the k-means kernels, which are its actual contribution.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Ctx, apply_rope
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+def attn_init(key, d_model: int, num_heads: int, num_kv_heads: int,
+              head_dim: int, *, out_dim: int | None = None,
+              qkv_bias: bool = False):
+    out_dim = out_dim or d_model
+    ks = jax.random.split(key, 4)
+    sc = d_model ** -0.5
+    params = {
+        "wq": jax.random.normal(ks[0], (d_model, num_heads * head_dim),
+                                jnp.float32) * sc,
+        "wk": jax.random.normal(ks[1], (d_model, num_kv_heads * head_dim),
+                                jnp.float32) * sc,
+        "wv": jax.random.normal(ks[2], (d_model, num_kv_heads * head_dim),
+                                jnp.float32) * sc,
+        "wo": jax.random.normal(ks[3], (num_heads * head_dim, out_dim),
+                                jnp.float32) * (num_heads * head_dim) ** -0.5,
+    }
+    specs = {"wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"),
+             "wv": ("fsdp", "tp"), "wo": ("tp", "fsdp")}
+    if qkv_bias:
+        params.update({
+            "bq": jnp.zeros((num_heads * head_dim,), jnp.float32),
+            "bk": jnp.zeros((num_kv_heads * head_dim,), jnp.float32),
+            "bv": jnp.zeros((num_kv_heads * head_dim,), jnp.float32),
+            "bo": jnp.zeros((out_dim,), jnp.float32),
+        })
+        specs.update({"bq": ("tp",), "bk": ("tp",), "bv": ("tp",),
+                      "bo": (None,)})
+    return params, specs
+
+
+def project_qkv(params, x: Array, ctx: Ctx, *, num_heads: int,
+                num_kv_heads: int, head_dim: int,
+                x_kv: Array | None = None):
+    """Returns q (B,S,H,hd), k,v (B,Skv,KH,hd)."""
+    xk = x if x_kv is None else x_kv
+    q = x @ ctx.cast(params["wq"])
+    k = xk @ ctx.cast(params["wk"])
+    v = xk @ ctx.cast(params["wv"])
+    if "bq" in params:
+        q = q + ctx.cast(params["bq"])
+        k = k + ctx.cast(params["bk"])
+        v = v + ctx.cast(params["bv"])
+    b, s = q.shape[0], q.shape[1]
+    skv = k.shape[1]
+    q = q.reshape(b, s, num_heads, head_dim)
+    k = k.reshape(b, skv, num_kv_heads, head_dim)
+    v = v.reshape(b, skv, num_kv_heads, head_dim)
+    return q, k, v
+
+
+def _softcap(scores: Array, cap: float | None) -> Array:
+    if cap is None:
+        return scores
+    return jnp.tanh(scores / cap) * cap
+
+
+def _expand_kv(k: Array, groups: int) -> Array:
+    """(B, S, KH, hd) -> (B, S, KH*groups, hd) by repeat (GQA)."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def dot_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                  window: int | None = None, softcap: float | None = None,
+                  scale: float | None = None,
+                  q_offset: Array | int = 0) -> Array:
+    """Plain attention: fine for short S or decode (S_q small).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KH, hd). ``q_offset`` is the absolute
+    position of q[0] (for causal masking during decode).
+    """
+    b, sq, h, hd = q.shape
+    kh = k.shape[2]
+    k = _expand_kv(k, h // kh)
+    v = _expand_kv(v, h // kh)
+    scale = scale if scale is not None else hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    scores = _softcap(scores, softcap)
+    skv = k.shape[1]
+    qpos = jnp.arange(sq) + q_offset                      # (Sq,)
+    kpos = jnp.arange(skv)                                # (Skv,)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    if window is not None:
+        mask = mask & (kpos[None, :] > qpos[:, None] - window)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def chunked_attention(q: Array, k: Array, v: Array, *, causal: bool,
+                      window: int | None = None,
+                      softcap: float | None = None,
+                      scale: float | None = None,
+                      chunk: int = 1024) -> Array:
+    """Online-softmax attention over KV chunks — O(S·chunk) live memory.
+
+    Shapes as in dot_attention with Sq == Skv (self-attention prefill).
+    """
+    b, s, h, hd = q.shape
+    kh = k.shape[2]
+    if s <= chunk:
+        return dot_attention(q, k, v, causal=causal, window=window,
+                             softcap=softcap, scale=scale)
+    if s % chunk != 0:
+        # largest divisor of s <= chunk (e.g. whisper's 1500 -> 750)
+        chunk = next(c for c in range(chunk, 0, -1) if s % c == 0)
+        if chunk < 64:  # degenerate split: plain attention is cheaper
+            return dot_attention(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, scale=scale)
+    n_chunks = s // chunk
+    scale = scale if scale is not None else hd ** -0.5
+
+    qf = q.astype(jnp.float32)
+    k_chunks = k.reshape(b, n_chunks, chunk, kh, hd)
+    v_chunks = v.reshape(b, n_chunks, chunk, kh, hd)
+    qpos = jnp.arange(s)
+
+    def body(carry, inp):
+        m_run, l_run, acc = carry
+        idx, kc, vc = inp                                  # (b,chunk,kh,hd)
+        kc = _expand_kv(kc, h // kh).astype(jnp.float32)
+        vc = _expand_kv(vc, h // kh).astype(jnp.float32)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", qf, kc) * scale
+        scores = _softcap(scores, softcap)
+        kpos = idx * chunk + jnp.arange(chunk)
+        mask = jnp.ones((s, chunk), bool)
+        if causal:
+            mask = mask & (kpos[None, :] <= qpos[:, None])
+        if window is not None:
+            mask = mask & (kpos[None, :] > qpos[:, None] - window)
+        scores = jnp.where(mask[None, None], scores, NEG_INF)
+        m_new = jnp.maximum(m_run, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m_run - m_new)
+        p = jnp.exp(scores - m_new[..., None])
+        l_new = l_run * alpha + jnp.sum(p, axis=-1)
+        acc = acc * alpha[..., None] + jnp.einsum("bhqk,bkhd->bhqd", p, vc)
+        return (m_new, l_new, acc), None
+
+    m0 = jnp.full((b, h, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, h, s), jnp.float32)
+    acc0 = jnp.zeros((b, h, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, acc0),
+        (jnp.arange(n_chunks),
+         jnp.moveaxis(k_chunks, 1, 0), jnp.moveaxis(v_chunks, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return jnp.moveaxis(out, 1, 2).astype(q.dtype)         # (B,S,H,hd)
+
+
+def attn_out(params, o: Array, ctx: Ctx) -> Array:
+    b, s = o.shape[0], o.shape[1]
+    o = o.reshape(b, s, -1)
+    y = o @ ctx.cast(params["wo"])
+    if "bo" in params:
+        y = y + ctx.cast(params["bo"])
+    return y
+
+
+def self_attention(params, x: Array, ctx: Ctx, *, num_heads: int,
+                   num_kv_heads: int, head_dim: int, causal: bool = True,
+                   rope_theta: float | None = 10000.0,
+                   window: int | None = None,
+                   softcap: float | None = None,
+                   scale: float | None = None,
+                   positions: Array | None = None,
+                   chunk: int = 1024,
+                   cache: dict | None = None):
+    """Full self-attention layer. With ``cache`` (decode): x is (B, 1, D),
+    cache holds k/v (B, S_max, KH, hd) + ``pos`` scalar; returns updated
+    cache. Without cache: prefill/train over the whole sequence; if the
+    caller wants a cache back it can pass ``cache={}``."""
+    b, s, _ = x.shape
+    q, k, v = project_qkv(params, x, ctx, num_heads=num_heads,
+                          num_kv_heads=num_kv_heads, head_dim=head_dim)
+    if cache is not None and "k" in cache:                 # decode step
+        pos = cache["pos"]
+        if rope_theta is not None:
+            pq = jnp.full((b, s), pos, jnp.int32) + jnp.arange(s)[None]
+            q = _rope_bshd(q, pq, rope_theta)
+            k = _rope_bshd(k, pq, rope_theta)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), pos, axis=1)
+        s_max = k_cache.shape[1]
+        # mask out slots beyond pos via positions
+        o = _decode_attention(q, k_cache, v_cache, pos, window=window,
+                              softcap=softcap, scale=scale)
+        new_cache = dict(cache, k=k_cache, v=v_cache, pos=pos + s)
+        return attn_out(params, o, ctx), new_cache
+
+    if positions is None:
+        positions = jnp.arange(s)[None].repeat(b, axis=0)
+    if rope_theta is not None:
+        q = _rope_bshd(q, positions, rope_theta)
+        k = _rope_bshd(k, positions, rope_theta)
+    o = chunked_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, scale=scale, chunk=chunk)
+    y = attn_out(params, o, ctx)
+    if cache is not None:                                  # prefill: build cache
+        new_cache = {"k": k, "v": v, "pos": jnp.array(s, jnp.int32)}
+        return y, new_cache
+    return y, None
+
+
+def _rope_bshd(x: Array, positions: Array, theta: float) -> Array:
+    """RoPE on (B, S, H, hd) given positions (B, S)."""
+    xt = x.swapaxes(1, 2)                                  # (B,H,S,hd)
+    xt = apply_rope(xt, positions[:, None, :], theta=theta)
+    return xt.swapaxes(1, 2)
+
+
+def _decode_attention(q: Array, k_cache: Array, v_cache: Array, pos,
+                      *, window: int | None, softcap: float | None,
+                      scale: float | None) -> Array:
+    """q: (B, 1, H, hd) vs cache (B, S_max, KH, hd); valid keys are < pos+1."""
+    b, sq, h, hd = q.shape
+    kh = k_cache.shape[2]
+    k = _expand_kv(k_cache, h // kh)
+    v = _expand_kv(v_cache, h // kh)
+    scale_ = scale if scale is not None else hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale_
+    scores = _softcap(scores, softcap)
+    kpos = jnp.arange(k.shape[1])
+    valid = kpos[None, :] <= (pos + jnp.arange(sq))[:, None]
+    if window is not None:
+        valid = valid & (kpos[None, :] > (pos + jnp.arange(sq))[:, None] - window)
+    scores = jnp.where(valid[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+def cross_attention(params, x: Array, kv_cache: dict, ctx: Ctx, *,
+                    num_heads: int, num_kv_heads: int, head_dim: int):
+    """Encoder-decoder cross attention against precomputed (k, v)."""
+    q = x @ ctx.cast(params["wq"])
+    if "bq" in params:
+        q = q + ctx.cast(params["bq"])
+    b, s = x.shape[0], x.shape[1]
+    q = q.reshape(b, s, num_heads, head_dim)
+    o = dot_attention(q, kv_cache["k"], kv_cache["v"], causal=False)
+    return attn_out(params, o, ctx)
+
+
+def build_cross_kv(params, enc_out: Array, ctx: Ctx, *, num_kv_heads: int,
+                   head_dim: int) -> dict:
+    k = enc_out @ ctx.cast(params["wk"])
+    v = enc_out @ ctx.cast(params["wv"])
+    if "bk" in params:
+        k = k + ctx.cast(params["bk"])
+        v = v + ctx.cast(params["bv"])
+    b, s = enc_out.shape[0], enc_out.shape[1]
+    return {"k": k.reshape(b, s, num_kv_heads, head_dim),
+            "v": v.reshape(b, s, num_kv_heads, head_dim)}

@@ -1,0 +1,167 @@
+"""Mamba2 (SSD) block: chunkwise-parallel scan for train/prefill and an O(1)
+recurrent step for decode. Faithful to the SSD formulation (scalar decay per
+head, state (heads, head_dim, d_state)); depthwise causal conv over the
+xBC stream; gated output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Ctx
+
+Array = jax.Array
+
+
+def mamba2_init(key, d_model: int, *, expand: int = 2, head_dim: int = 64,
+                d_state: int = 64, conv_width: int = 4):
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    ks = jax.random.split(key, 8)
+    sc = d_model ** -0.5
+    params = {
+        "w_z": jax.random.normal(ks[0], (d_model, d_inner)) * sc,
+        "w_x": jax.random.normal(ks[1], (d_model, d_inner)) * sc,
+        "w_b": jax.random.normal(ks[2], (d_model, d_state)) * sc,
+        "w_c": jax.random.normal(ks[3], (d_model, d_state)) * sc,
+        "w_dt": jax.random.normal(ks[4], (d_model, n_heads)) * sc,
+        "dt_bias": jnp.zeros((n_heads,)),
+        "A_log": jnp.log(jnp.arange(1, n_heads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((n_heads,)),
+        "conv": jax.random.normal(ks[5],
+                                  (conv_width, d_inner + 2 * d_state)) * 0.2,
+        "norm_scale": jnp.ones((d_inner,)),
+        "w_out": jax.random.normal(ks[6], (d_inner, d_model)) * d_inner**-0.5,
+    }
+    params = {k: v.astype(jnp.float32) for k, v in params.items()}
+    specs = {
+        "w_z": ("fsdp", "tp"), "w_x": ("fsdp", "tp"),
+        "w_b": ("fsdp", None), "w_c": ("fsdp", None),
+        "w_dt": ("fsdp", "tp"), "dt_bias": ("tp",), "A_log": ("tp",),
+        "D": ("tp",), "conv": (None, None), "norm_scale": ("tp",),
+        "w_out": ("tp", "fsdp"),
+    }
+    return params, specs
+
+
+def _causal_conv(x: Array, w: Array, state: Array | None = None):
+    """Depthwise causal conv. x: (B, S, C), w: (W, C).
+
+    With ``state`` (B, W-1, C) performs a streaming step and returns the
+    updated state (decode); without, masks-from-left (train/prefill)."""
+    width = w.shape[0]
+    if state is not None:
+        buf = jnp.concatenate([state, x], axis=1)          # (B, W-1+S, C)
+        out = sum(buf[:, i:i + x.shape[1]] * w[i] for i in range(width))
+        return out, buf[:, -(width - 1):]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    return out, pad[:, -(width - 1):]
+
+
+def _ssd_chunked(xh, b_in, c_in, dt, A, *, chunk: int, h0=None):
+    """Chunkwise SSD scan.
+
+    xh: (B,S,H,P) values; b_in/c_in: (B,S,N) shared across heads;
+    dt: (B,S,H) (post-softplus); A: (H,) negative decay rates.
+    Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    bsz, s, h, p = xh.shape
+    n = b_in.shape[-1]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+
+    xc = xh.reshape(bsz, nc, chunk, h, p)
+    bc = b_in.reshape(bsz, nc, chunk, n)
+    cc = c_in.reshape(bsz, nc, chunk, n)
+    dtc = dt.reshape(bsz, nc, chunk, h)
+
+    la = dtc * A[None, None, None, :]                      # log decay (B,nc,L,H) <= 0
+    cum = jnp.cumsum(la, axis=2)                           # inclusive cumsum
+
+    def body(h_prev, inp):
+        # intra: M[t,tau] = (C_t.B_tau) * exp(cum_t - cum_tau) * dt_tau, tau<=t
+        # inter: y_t += C_t . (exp(cum_t) h_prev)
+        # state: h = exp(cum_L) h_prev + sum_tau exp(cum_L - cum_tau) dt B x
+        xb, bb, cb, cumb, dtb = inp
+        seg = cumb[:, :, None, :] - cumb[:, None, :, :]
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        seg = jnp.where(tri[None, :, :, None], seg, -jnp.inf)
+        cb_f, bb_f = cb.astype(jnp.float32), bb.astype(jnp.float32)
+        scores = jnp.einsum("bln,bmn->blm", cb_f, bb_f)
+        m = scores[:, :, :, None] * jnp.exp(seg) * dtb[:, None, :, :]
+        y_intra = jnp.einsum("blmh,bmhp->blhp", m, xb.astype(jnp.float32))
+        y_inter = jnp.einsum("bln,bhpn,blh->blhp", cb_f, h_prev,
+                             jnp.exp(cumb))
+        tot = cumb[:, -1:, :]
+        w = jnp.exp(tot - cumb) * dtb
+        h_new = (jnp.exp(tot[:, 0])[:, :, None, None] * h_prev
+                 + jnp.einsum("blh,bln,blhp->bhpn", w, bb_f,
+                              xb.astype(jnp.float32)))
+        return h_new, y_intra + y_inter
+
+    h_init = (jnp.zeros((bsz, h, p, n), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+    xs = (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(bc, 1, 0),
+          jnp.moveaxis(cc, 1, 0), jnp.moveaxis(cum, 1, 0),
+          jnp.moveaxis(dtc, 1, 0))
+    h_fin, ys = jax.lax.scan(body, h_init, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    return y, h_fin
+
+
+def mamba2(params, x: Array, ctx: Ctx, *, head_dim: int = 64,
+           d_state: int = 64, conv_width: int = 4, chunk: int = 256,
+           cache: dict | None = None):
+    """x: (B, S, D). Cache: {"ssm": (B,H,P,N) f32, "conv": (B,W-1,C)}."""
+    bsz, s, d = x.shape
+    d_inner = params["w_z"].shape[1]
+    n_heads = d_inner // head_dim
+
+    z = x @ ctx.cast(params["w_z"])                        # gate branch
+    xh = x @ ctx.cast(params["w_x"])
+    b_in = x @ ctx.cast(params["w_b"])
+    c_in = x @ ctx.cast(params["w_c"])
+    dt_raw = x @ ctx.cast(params["w_dt"])
+
+    xbc = jnp.concatenate([xh, b_in, c_in], axis=-1)
+    has_state = cache is not None and "ssm" in cache
+    decode = has_state and s == 1
+    conv_state = cache.get("conv") if has_state else None
+    xbc, conv_new = _causal_conv(xbc, ctx.cast(params["conv"]), conv_state)
+    xbc = jax.nn.silu(xbc)
+    xh = xbc[..., :d_inner]
+    b_in = xbc[..., d_inner:d_inner + d_state]
+    c_in = xbc[..., d_inner + d_state:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])              # (B,S,H)
+    a_neg = -jnp.exp(params["A_log"])                      # (H,)
+    xh_h = xh.reshape(bsz, s, n_heads, head_dim)
+
+    if decode:
+        # single-step recurrence (s == 1)
+        h_prev = cache["ssm"]
+        la = dt[:, 0] * a_neg[None]                        # (B,H)
+        decay = jnp.exp(la)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         b_in[:, 0].astype(jnp.float32),
+                         xh_h[:, 0].astype(jnp.float32))
+        h_new = decay[:, :, None, None] * h_prev + upd
+        y = jnp.einsum("bn,bhpn->bhp", c_in[:, 0].astype(jnp.float32),
+                       h_new)[:, None]                     # (B,1,H,P)
+        new_cache = dict(cache, ssm=h_new, conv=conv_new)
+    else:
+        h0 = cache["ssm"] if has_state else None
+        y, h_fin = _ssd_chunked(xh_h, b_in, c_in, dt, a_neg,
+                                chunk=min(chunk, s), h0=h0)
+        new_cache = ({"ssm": h_fin, "conv": conv_new}
+                     if cache is not None else None)
+
+    y = y + params["D"][None, None, :, None] * xh_h.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(ctx.compute_dtype)
+    # gated RMSNorm (mamba2 style)
+    y = y * jax.nn.silu(z)
+    y32 = y.astype(jnp.float32)
+    y = (y32 * jax.lax.rsqrt(jnp.mean(y32 * y32, -1, keepdims=True) + 1e-6)
+         * params["norm_scale"]).astype(ctx.compute_dtype)
+    return y @ ctx.cast(params["w_out"]), new_cache

@@ -1,0 +1,126 @@
+"""Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style).
+
+Queries and KV are compressed through low-rank latents; the decode-time KV
+cache stores only the latent (kv_lora_rank) + decoupled RoPE key
+(rope_head_dim) per token — this is the published arch's KV-compression,
+orthogonal to our clustered-KV machinery (which can run on top of the
+latent keys; see models/kmeans_attention.py).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Ctx, apply_rope
+from repro.models.layers.attention import NEG_INF, attn_out
+
+Array = jax.Array
+
+
+def mla_init(key, d_model: int, num_heads: int, *, q_lora_rank: int,
+             kv_lora_rank: int, nope_head_dim: int, rope_head_dim: int,
+             v_head_dim: int):
+    ks = jax.random.split(key, 8)
+    sc = d_model ** -0.5
+    h = num_heads
+    params = {
+        "wq_a": jax.random.normal(ks[0], (d_model, q_lora_rank)) * sc,
+        "q_norm": jnp.ones((q_lora_rank,), jnp.float32),
+        "wq_b": jax.random.normal(
+            ks[1], (q_lora_rank, h * (nope_head_dim + rope_head_dim))
+        ) * q_lora_rank ** -0.5,
+        "wkv_a": jax.random.normal(
+            ks[2], (d_model, kv_lora_rank + rope_head_dim)) * sc,
+        "kv_norm": jnp.ones((kv_lora_rank,), jnp.float32),
+        "wkv_b": jax.random.normal(
+            ks[3], (kv_lora_rank, h * (nope_head_dim + v_head_dim))
+        ) * kv_lora_rank ** -0.5,
+        "wo": jax.random.normal(
+            ks[4], (h * v_head_dim, d_model)) * (h * v_head_dim) ** -0.5,
+    }
+    params = {k: v.astype(jnp.float32) for k, v in params.items()}
+    specs = {
+        "wq_a": ("fsdp", None), "q_norm": (None,),
+        "wq_b": (None, "tp"),
+        "wkv_a": ("fsdp", None), "kv_norm": (None,),
+        "wkv_b": (None, "tp"),
+        "wo": ("tp", "fsdp"),
+    }
+    return params, specs
+
+
+def _rms(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(x32 * x32, -1, keepdims=True) + eps)
+    return (y * scale).astype(x.dtype)
+
+
+def mla_attention(params, x: Array, ctx: Ctx, *, num_heads: int,
+                  nope_head_dim: int, rope_head_dim: int, v_head_dim: int,
+                  kv_lora_rank: int, rope_theta: float = 10000.0,
+                  positions: Array | None = None,
+                  cache: dict | None = None):
+    """Returns (out, new_cache). Cache layout: {"latent": (B, S_max, R),
+    "k_rope": (B, S_max, rope_hd), "pos": int}."""
+    b, s, _ = x.shape
+    h = num_heads
+
+    # --- queries
+    q_lat = _rms(x @ ctx.cast(params["wq_a"]), params["q_norm"])
+    q = (q_lat @ ctx.cast(params["wq_b"])).reshape(
+        b, s, h, nope_head_dim + rope_head_dim)
+    q_nope, q_rope = q[..., :nope_head_dim], q[..., nope_head_dim:]
+
+    # --- kv latent + decoupled rope key
+    kv_a = x @ ctx.cast(params["wkv_a"])
+    latent = _rms(kv_a[..., :kv_lora_rank], params["kv_norm"])   # (B,S,R)
+    k_rope_new = kv_a[..., kv_lora_rank:]                        # (B,S,rope_hd)
+
+    decode = cache is not None and "latent" in cache
+    if decode:
+        pos = cache["pos"]
+        pq = jnp.full((b, s), pos, jnp.int32) + jnp.arange(s)[None]
+        latent_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["latent"], latent.astype(cache["latent"].dtype), pos, axis=1)
+        k_rope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"],
+            apply_rope(k_rope_new[:, None], pq[:, None], theta=rope_theta
+                       )[:, 0].astype(cache["k_rope"].dtype),
+            pos, axis=1)
+        latent_all, k_rope_all = latent_c, k_rope_c
+        kpos_limit = pos + s
+        new_cache = dict(cache, latent=latent_c, k_rope=k_rope_c, pos=pos + s)
+    else:
+        if positions is None:
+            positions = jnp.arange(s)[None].repeat(b, axis=0)
+        pq = positions
+        k_rope_all = apply_rope(k_rope_new[:, None], positions[:, None],
+                                theta=rope_theta)[:, 0]
+        latent_all = latent
+        kpos_limit = None
+        new_cache = ({"latent": latent, "k_rope": k_rope_all,
+                      "pos": jnp.array(s, jnp.int32)}
+                     if cache is not None else None)
+
+    q_rope = apply_rope(q_rope.swapaxes(1, 2), pq[:, None],
+                        theta=rope_theta).swapaxes(1, 2)
+
+    # --- expand latent to per-head keys/values
+    skv = latent_all.shape[1]
+    kv = (latent_all @ ctx.cast(params["wkv_b"])).reshape(
+        b, skv, h, nope_head_dim + v_head_dim)
+    k_nope, v = kv[..., :nope_head_dim], kv[..., nope_head_dim:]
+
+    scale = (nope_head_dim + rope_head_dim) ** -0.5
+    scores = (jnp.einsum("bqhd,bkhd->bhqk", q_nope, k_nope)
+              + jnp.einsum("bqhd,bkd->bhqk", q_rope, k_rope_all)
+              ).astype(jnp.float32) * scale
+    qpos = pq[0] if decode else jnp.arange(s)
+    kpos = jnp.arange(skv)
+    mask = kpos[None, :] <= qpos[:, None]
+    if kpos_limit is not None:
+        mask = mask & (kpos[None, :] < kpos_limit)
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return attn_out(params, o, ctx), new_cache

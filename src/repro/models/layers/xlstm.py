@@ -1,0 +1,272 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel for train/prefill,
+O(1) recurrent for decode) and sLSTM (scalar memory with hidden-state
+feedback — inherently sequential, computed under lax.scan).
+
+Follows the xLSTM paper's stabilized exponential gating: all gate algebra
+is done in log space with a running stabilizer ``m`` so exp() never
+overflows; the chunkwise form carries (C_hat, n_hat, m_state) where the
+true state is ``C = C_hat * exp(m_state)``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import Ctx
+
+Array = jax.Array
+
+_LOG_EPS = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, d_model: int, num_heads: int, *, proj_factor: float = 2.0):
+    d_inner = int(d_model * proj_factor)
+    ks = jax.random.split(key, 8)
+    sc = d_model ** -0.5
+    params = {
+        "w_up": jax.random.normal(ks[0], (d_model, d_inner)) * sc,
+        "w_gate": jax.random.normal(ks[1], (d_model, d_inner)) * sc,
+        "wq": jax.random.normal(ks[2], (d_inner, d_inner)) * d_inner ** -0.5,
+        "wk": jax.random.normal(ks[3], (d_inner, d_inner)) * d_inner ** -0.5,
+        "wv": jax.random.normal(ks[4], (d_inner, d_inner)) * d_inner ** -0.5,
+        "w_i": jax.random.normal(ks[5], (d_inner, num_heads)) * 0.01,
+        "b_i": jnp.zeros((num_heads,)),
+        "w_f": jax.random.normal(ks[6], (d_inner, num_heads)) * 0.01,
+        "b_f": jnp.full((num_heads,), 3.0),    # open forget gates at init
+        "w_down": jax.random.normal(ks[7], (d_inner, d_model)) * d_inner ** -0.5,
+        "out_norm": jnp.ones((d_inner,)),
+    }
+    params = {k: v.astype(jnp.float32) for k, v in params.items()}
+    # §Perf xlstm/H3 (REFUTED, reverted): replicating wq/wk over the model
+    # axis did not remove the dominant collective (which was the sLSTM
+    # backward, see H4) and doubled the compute term. Standard TP layout:
+    specs = {
+        "w_up": ("fsdp", "tp"), "w_gate": ("fsdp", "tp"),
+        "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+        "w_i": ("fsdp", None), "b_i": (None,),
+        "w_f": ("fsdp", None), "b_f": (None,),
+        "w_down": ("tp", "fsdp"), "out_norm": ("tp",),
+    }
+    return params, specs
+
+
+def _mlstm_chunk_scan(q, k, v, log_i, log_f, *, chunk: int, state=None):
+    """Stabilized chunkwise mLSTM.
+
+    q,k,v: (B,S,H,D); log_i/log_f: (B,S,H). Returns (h (B,S,H,D), state).
+    state = (C_hat (B,H,D,D), n_hat (B,H,D), m (B,H))."""
+    b, s, h, d = q.shape
+    assert s % chunk == 0
+    nc = s // chunk
+    scale = d ** -0.5
+
+    qc = q.reshape(b, nc, chunk, h, d)
+    kc = k.reshape(b, nc, chunk, h, d)
+    vc = v.reshape(b, nc, chunk, h, d)
+    lic = log_i.reshape(b, nc, chunk, h)
+    lfc = log_f.reshape(b, nc, chunk, h)
+
+    def body(carry, inp):
+        # Mixed precision (perf-iteration xlstm/H1, EXPERIMENTS.md §Perf):
+        # gate algebra stays f32 log-space; the O(L^2) score/weight tensors
+        # and all MXU operands are bf16 with f32 accumulation; the carried
+        # state (C_hat, n_hat, m) stays f32 so cross-chunk accumulation
+        # never drifts.
+        c_hat, n_hat, m_st = carry                     # (B,H,D,D),(B,H,D),(B,H)
+        qb, kb, vb, lib, lfb = inp
+        qh = qb.astype(jnp.bfloat16)
+        kh = kb.astype(jnp.bfloat16)
+        vh = vb.astype(jnp.bfloat16)
+        bcum = jnp.cumsum(lfb, axis=1)                 # (B,L,H) inclusive
+        # log weight of tau's contribution to row t (tau <= t):
+        #   bcum_t - bcum_tau + log_i_tau
+        logw = (bcum[:, :, None, :] - bcum[:, None, :, :]
+                + lib[:, None, :, :])                  # (B,t,tau,H)
+        tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+        logw = jnp.where(tri[None, :, :, None], logw, _LOG_EPS)
+        # inter (initial state) log coefficient for row t: m_st + bcum_t
+        log_inter = m_st[:, None, :] + bcum            # (B,L,H)
+        m_row = jnp.maximum(jnp.max(logw, axis=2), log_inter)  # (B,L,H)
+        m_row = jnp.maximum(m_row, -60.0)             # floor to avoid -inf
+        w_intra = jnp.exp(logw - m_row[:, :, None, :])           # (B,t,tau,H)
+        w_inter = jnp.exp(log_inter - m_row)                     # (B,L,H)
+        scores = jax.lax.dot_general(                  # MXU, f32 accum
+            jnp.moveaxis(qh, 2, 1), jnp.moveaxis(kh, 2, 1),
+            (((3,), (3,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)        # (B,H,t,tau)
+        scores = jnp.moveaxis(scores, 1, 3) * scale    # (B,t,tau,H)
+        sw = (scores * w_intra).astype(jnp.bfloat16)
+        w_intra_h = w_intra.astype(jnp.bfloat16)
+        num = (jnp.einsum("blmh,bmhd->blhd", sw, vh,
+                          preferred_element_type=jnp.float32)
+               + jnp.einsum("blhd,bhde,blh->blhe",
+                            qb.astype(jnp.float32) * scale, c_hat, w_inter))
+        # n vector: sum_tau w_intra * k_tau  + w_inter * n_hat
+        nvec = (jnp.einsum("blmh,bmhd->blhd", w_intra_h, kh,
+                           preferred_element_type=jnp.float32)
+                + w_inter[..., None] * n_hat[:, None])
+        den = jnp.abs(jnp.einsum("blhd,blhd->blh",
+                                 qb.astype(jnp.float32) * scale, nvec))
+        den = jnp.maximum(den, jnp.exp(-m_row))
+        # (§Perf xlstm/H5 tried bf16 output here — REFUTED: the psum'd pair
+        # was not the output cotangent, and recurrent-equivalence degraded.)
+        hb = num / den[..., None]
+        # ---- state update to end of chunk (f32 carry)
+        btot = bcum[:, -1, :]                          # (B,H)
+        logw_st = btot[:, None, :] - bcum + lib        # (B,L,H) contribution
+        m_new = jnp.maximum(m_st + btot, jnp.max(logw_st, axis=1))
+        w_st = jnp.exp(logw_st - m_new[:, None, :])    # (B,L,H)
+        carry_scale = jnp.exp(m_st + btot - m_new)     # (B,H)
+        c_new = (carry_scale[:, :, None, None] * c_hat
+                 + jnp.einsum("blh,blhd,blhe->bhde",
+                              w_st.astype(jnp.bfloat16), kh, vh,
+                              preferred_element_type=jnp.float32))
+        n_new = (carry_scale[..., None] * n_hat
+                 + jnp.einsum("blh,blhd->bhd", w_st.astype(jnp.bfloat16),
+                              kh, preferred_element_type=jnp.float32))
+        return (c_new, n_new, m_new), hb
+
+    if state is None:
+        state = (jnp.zeros((b, h, d, d), jnp.float32),
+                 jnp.zeros((b, h, d), jnp.float32),
+                 jnp.zeros((b, h), jnp.float32))
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, lic, lfc))
+    state, hs = jax.lax.scan(body, state, xs)
+    return jnp.moveaxis(hs, 0, 1).reshape(b, s, h, d), state
+
+
+def _mlstm_step(q, k, v, log_i, log_f, state):
+    """Single recurrent step. q,k,v: (B,1,H,D); gates (B,1,H)."""
+    c_hat, n_hat, m_st = state
+    b, _, h, d = q.shape
+    scale = d ** -0.5
+    qb = q[:, 0].astype(jnp.float32)
+    kb = k[:, 0].astype(jnp.float32)
+    vb = v[:, 0].astype(jnp.float32)
+    li, lf = log_i[:, 0], log_f[:, 0]                  # (B,H)
+    m_new = jnp.maximum(lf + m_st, li)
+    f_s = jnp.exp(lf + m_st - m_new)
+    i_s = jnp.exp(li - m_new)
+    c_new = (f_s[:, :, None, None] * c_hat
+             + i_s[:, :, None, None] * jnp.einsum("bhd,bhe->bhde", kb, vb))
+    n_new = f_s[..., None] * n_hat + i_s[..., None] * kb
+    num = jnp.einsum("bhd,bhde->bhe", qb * scale, c_new)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qb * scale, n_new)),
+                      jnp.exp(-m_new))
+    hb = (num / den[..., None])[:, None]               # (B,1,H,D)
+    return hb, (c_new, n_new, m_new)
+
+
+def mlstm(params, x: Array, ctx: Ctx, *, num_heads: int, chunk: int = 256,
+          cache: dict | None = None):
+    """mLSTM block. Cache: {"mlstm": (C_hat, n_hat, m)} pytree."""
+    b, s, _ = x.shape
+    d_inner = params["w_up"].shape[1]
+    dh = d_inner // num_heads
+
+    up = x @ ctx.cast(params["w_up"])
+    gate = jax.nn.silu(x @ ctx.cast(params["w_gate"]))
+    q = (up @ ctx.cast(params["wq"])).reshape(b, s, num_heads, dh)
+    k = (up @ ctx.cast(params["wk"])).reshape(b, s, num_heads, dh)
+    v = (up @ ctx.cast(params["wv"])).reshape(b, s, num_heads, dh)
+    log_i = (up @ ctx.cast(params["w_i"])
+             + ctx.cast(params["b_i"])).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(
+        (up @ ctx.cast(params["w_f"])
+         + ctx.cast(params["b_f"])).astype(jnp.float32))
+
+    has_state = cache is not None and "mlstm" in cache
+    if has_state and s == 1:
+        h, state = _mlstm_step(q, k, v, log_i, log_f, cache["mlstm"])
+        new_cache = dict(cache, mlstm=state)
+    else:
+        c = min(chunk, s)
+        h, state = _mlstm_chunk_scan(q, k, v, log_i, log_f, chunk=c,
+                                     state=cache["mlstm"] if has_state else None)
+        new_cache = {"mlstm": state} if cache is not None else None
+
+    h = h.reshape(b, s, d_inner).astype(ctx.compute_dtype)
+    h32 = h.astype(jnp.float32)
+    h = (h32 * jax.lax.rsqrt(jnp.mean(h32 * h32, -1, keepdims=True) + 1e-6)
+         * params["out_norm"]).astype(ctx.compute_dtype)
+    out = (h * gate) @ ctx.cast(params["w_down"])
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, d_model: int, num_heads: int):
+    dh = d_model // num_heads
+    ks = jax.random.split(key, 3)
+    sc = d_model ** -0.5
+    params = {
+        # input weights for (z, i, f, o) gates
+        "w_gates": jax.random.normal(ks[0], (d_model, 4 * d_model)) * sc,
+        "b_gates": jnp.concatenate([
+            jnp.zeros((d_model,)), jnp.zeros((d_model,)),
+            jnp.full((d_model,), 3.0), jnp.zeros((d_model,))]),
+        # per-head recurrent weights (block-diagonal R)
+        "r_gates": jax.random.normal(ks[1], (num_heads, dh, 4 * dh)) * dh ** -0.5,
+        "w_out": jax.random.normal(ks[2], (d_model, d_model)) * sc,
+        "out_norm": jnp.ones((d_model,)),
+    }
+    params = {k: v.astype(jnp.float32) for k, v in params.items()}
+    # r_gates sharded over the model axis (§Perf xlstm/H4): the backward
+    # time-scan accumulates dR per step with an immediate cross-data
+    # all-reduce; sharding R's output dim cuts that per-step wire 16x.
+    specs = {"w_gates": ("fsdp", None), "b_gates": (None,),
+             "r_gates": (None, None, "tp"), "w_out": ("fsdp", "tp"),
+             "out_norm": (None,)}
+    return params, specs
+
+
+def slstm(params, x: Array, ctx: Ctx, *, num_heads: int,
+          cache: dict | None = None):
+    """sLSTM block — sequential scan over time (hidden feeds back into
+    gates). Cache: {"slstm": (c, n, m, h)} each (B, H, dh) f32."""
+    b, s, d = x.shape
+    dh = d // num_heads
+
+    pre = (x @ ctx.cast(params["w_gates"])
+           + ctx.cast(params["b_gates"])).astype(jnp.float32)
+    pre = pre.reshape(b, s, 4, num_heads, dh)
+
+    r = params["r_gates"]                               # (H, dh, 4dh)
+
+    def step(carry, pre_t):
+        c, n, m, h_prev = carry                         # (B,H,dh) each
+        rec = jnp.einsum("bhd,hde->bhe", h_prev, r)     # (B,H,4dh)
+        rec = rec.reshape(b, num_heads, 4, dh).swapaxes(1, 2)
+        g = pre_t + rec                                 # (B,4,H,dh)
+        z = jnp.tanh(g[:, 0])
+        li = g[:, 1]
+        lf = jax.nn.log_sigmoid(g[:, 2])
+        o = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(lf + m, li)
+        i_s = jnp.exp(li - m_new)
+        f_s = jnp.exp(lf + m - m_new)
+        c_new = f_s * c + i_s * z
+        n_new = f_s * n + i_s
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    if cache is not None and "slstm" in cache:
+        carry = cache["slstm"]
+    else:
+        zeros = jnp.zeros((b, num_heads, dh), jnp.float32)
+        carry = (zeros, zeros, zeros, zeros)
+    carry, hs = jax.lax.scan(step, carry, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+
+    h32 = h
+    h = (h32 * jax.lax.rsqrt(jnp.mean(h32 * h32, -1, keepdims=True) + 1e-6)
+         * params["out_norm"]).astype(ctx.compute_dtype)
+    out = h @ ctx.cast(params["w_out"])
+    new_cache = dict(cache, slstm=carry) if cache is not None else None
+    return out, new_cache

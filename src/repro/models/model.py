@@ -1,0 +1,324 @@
+"""Model facade: embeddings + stack + loss + prefill/decode for every
+assigned architecture, including the whisper encoder-decoder and the
+stubbed VLM/audio frontends.
+
+Decode modes:
+  "dense"     — standard per-layer KV cache (decode_32k)
+  "clustered" — flash-kmeans clustered-KV sparse decode (long_500k for
+                dense-attention archs; global layers of gemma2)
+  recurrent archs (ssm/hybrid) carry their state caches transparently.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common, transformer
+from repro.models import kmeans_attention as kma
+from repro.models.common import Ctx
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_model(key, cfg: ArchConfig, *, max_pos: int = 32768):
+    ks = jax.random.split(key, 8)
+    params: dict = {}
+    specs: dict = {}
+
+    p, s = common.embed_init(ks[0], cfg.vocab_padded(), cfg.d_model)
+    params["embed"], specs["embed"] = p, s
+    if not cfg.tie_embeddings:
+        p, s = common.embed_init(ks[1], cfg.vocab_padded(), cfg.d_model)
+        params["lm_head"], specs["lm_head"] = p, s
+
+    if cfg.learned_pos:
+        params["pos_embed"] = (jax.random.normal(
+            ks[2], (max_pos, cfg.d_model), jnp.float32) * 0.02)
+        specs["pos_embed"] = (None, "fsdp")
+
+    if cfg.frontend:
+        p, s = common.dense_init(ks[3], cfg.d_model, cfg.d_model,
+                                 spec=("fsdp", None))
+        params["frontend"], specs["frontend"] = p, s
+
+    p, s = transformer.init_stack(ks[4], cfg)
+    params["stack"], specs["stack"] = p, s
+
+    if cfg.encoder_layers:
+        import dataclasses
+        enc_cfg = dataclasses.replace(cfg, num_layers=cfg.encoder_layers,
+                                      cross_attention=False, family="dense",
+                                      attention="gqa")
+        p, s = transformer.init_stack(ks[5], enc_cfg)
+        params["encoder"], specs["encoder"] = p, s
+        params["enc_pos"] = (jax.random.normal(
+            ks[6], (cfg.frontend_seq, cfg.d_model), jnp.float32) * 0.02)
+        specs["enc_pos"] = (None, "fsdp")
+
+    (p, s), _ = common.make_norm(cfg.norm, cfg.d_model)
+    params["final_norm"], specs["final_norm"] = p, s
+    return params, specs
+
+
+def _final_norm(cfg, params, x, ctx):
+    _, apply = common.make_norm(cfg.norm, cfg.d_model)
+    return apply(params["final_norm"], x, ctx)
+
+
+def _embed_tokens(cfg, params, tokens, ctx):
+    x = common.embed(params["embed"], tokens, ctx)
+    if cfg.norm == "rmsnorm_1p":      # gemma convention
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def _logits(cfg, params, x, ctx):
+    head = params.get("lm_head", params["embed"])
+    return common.unembed(head, x, ctx, softcap=cfg.final_softcap)
+
+
+def _encoder_ctx(cfg, params, frames, ctx):
+    """Whisper: run the (stubbed conv output) frames through the encoder
+    and precompute per-layer cross-attention KV for the decoder."""
+    import dataclasses
+    from repro.models.layers import attention as attn_mod
+    enc_cfg = dataclasses.replace(cfg, num_layers=cfg.encoder_layers,
+                                  cross_attention=False, family="dense",
+                                  attention="gqa")
+    x = frames + ctx.cast(params["enc_pos"])[None, :frames.shape[1]]
+    x, _, _ = transformer.apply_stack(params["encoder"], x, ctx, enc_cfg,
+                                      causal=False)
+    x = _final_norm(cfg, params, x, ctx)
+    # one shared cross-KV per decoder group (built from each group's params)
+    subs, n_groups = transformer.group_layout(cfg)
+
+    def build(gp):
+        out = {}
+        for i, sub in enumerate(subs):
+            p = gp[f"{i}_{sub}"]
+            out[f"{i}_{sub}"] = attn_mod.build_cross_kv(
+                p["cross"], x, ctx, num_kv_heads=cfg.num_kv_heads,
+                head_dim=cfg.resolved_head_dim)
+        return out
+
+    return jax.vmap(build)(params["stack"]["groups"])
+
+
+# ---------------------------------------------------------------------------
+# train forward / loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, batch: dict, ctx: Ctx, cfg: ArchConfig, *,
+            remat: bool = True) -> tuple[Array, dict]:
+    """batch: tokens (B,S_text) int32, labels (B,S_text) int32 (-1 = pad),
+    optional frontend (B,F,D) f32 stub embeddings / frames."""
+    tokens = batch["tokens"]
+    labels = batch["labels"]
+    x = _embed_tokens(cfg, params, tokens, ctx)
+    cross_kv = None
+    n_front = 0
+
+    if cfg.family == "audio":
+        cross_kv = _encoder_ctx(cfg, params, ctx.cast(batch["frontend"]), ctx)
+    elif cfg.frontend:                      # vlm: prepend projected patches
+        patches = common.dense(params["frontend"],
+                               ctx.cast(batch["frontend"]), ctx)
+        x = jnp.concatenate([patches, x], axis=1)
+        n_front = patches.shape[1]
+
+    if cfg.learned_pos:
+        s = x.shape[1]
+        x = x + ctx.cast(params["pos_embed"])[None, :s]
+    x = ctx.constrain(x, "dp", None, None)
+
+    x, _, aux = transformer.apply_stack(
+        params["stack"], x, ctx, cfg,
+        positions=None if cfg.learned_pos else _positions(x),
+        cross_kv=cross_kv, remat=remat)
+    x = _final_norm(cfg, params, x, ctx)
+    if n_front:
+        x = x[:, n_front:]
+    logits = _logits(cfg, params, x, ctx)      # (B,S,Vpad) f32
+
+    valid = labels >= 0
+    lbl = jnp.maximum(labels, 0)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, lbl[..., None], axis=-1)[..., 0]
+    nll = (logz - gold) * valid
+    ntok = jnp.maximum(jnp.sum(valid), 1)
+    loss = jnp.sum(nll) / ntok + 0.01 * aux
+    return loss, {"nll": jnp.sum(nll) / ntok, "aux": aux, "ntok": ntok}
+
+
+def _positions(x):
+    b, s = x.shape[0], x.shape[1]
+    return jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens: Array, ctx: Ctx, cfg: ArchConfig, *,
+            max_seq: int, frontend: Array | None = None):
+    """Full forward that also populates a dense decode cache."""
+    b, s = tokens.shape
+    s_total = s + (frontend.shape[1]
+                   if (cfg.frontend and cfg.family != "audio"
+                       and frontend is not None) else 0)
+    assert max_seq >= s_total, (max_seq, s_total)
+    caches = transformer.init_cache(cfg, b, max_seq,
+                                    dtype=ctx.compute_dtype)
+    x = _embed_tokens(cfg, params, tokens, ctx)
+    cross_kv = None
+    if cfg.family == "audio":
+        cross_kv = _encoder_ctx(cfg, params, ctx.cast(frontend), ctx)
+    elif cfg.frontend and frontend is not None:
+        patches = common.dense(params["frontend"], ctx.cast(frontend), ctx)
+        x = jnp.concatenate([patches, x], axis=1)
+    if cfg.learned_pos:
+        x = x + ctx.cast(params["pos_embed"])[None, :x.shape[1]]
+
+    x, caches, _ = transformer.apply_stack(
+        params["stack"], x, ctx, cfg,
+        positions=None if cfg.learned_pos else _positions(x),
+        caches=_prefill_caches(caches), cross_kv=cross_kv)
+    x = _final_norm(cfg, params, x, ctx)
+    logits = _logits(cfg, params, x[:, -1:], ctx)
+    caches = _pad_caches(caches, max_seq)
+    return logits, caches, cross_kv
+
+
+def _prefill_caches(caches):
+    """During prefill the attention layers build caches from scratch; mark
+    them as 'empty dict' so self_attention takes the build path."""
+    def strip(c):
+        if isinstance(c, dict) and "k" in c and "pos" in c:
+            return {}
+        if isinstance(c, dict) and "latent" in c:
+            return {}
+        return c
+    return jax.tree_util.tree_map(
+        strip, caches,
+        is_leaf=lambda x: isinstance(x, dict) and ("k" in x or "latent" in x
+                                                   or "ssm" in x or "mlstm" in x
+                                                   or "slstm" in x))
+
+
+def _pad_caches(caches, max_seq):
+    """Grow prefill-built KV caches (length S) to max_seq slots."""
+    def pad(c):
+        if isinstance(c, dict) and "k" in c and "pos" in c:
+            s = c["k"].shape[2] if c["k"].ndim == 5 else c["k"].shape[1]
+            # stacked leading group dim: (G,B,S,KH,hd)
+            padw = [(0, 0)] * c["k"].ndim
+            axis = 2 if c["k"].ndim == 5 else 1
+            padw[axis] = (0, max_seq - c["k"].shape[axis])
+            return dict(c, k=jnp.pad(c["k"], padw), v=jnp.pad(c["v"], padw))
+        if isinstance(c, dict) and "latent" in c:
+            axis = 2 if c["latent"].ndim == 4 else 1
+            padw = [(0, 0)] * c["latent"].ndim
+            padw[axis] = (0, max_seq - c["latent"].shape[axis])
+            padw2 = [(0, 0)] * c["k_rope"].ndim
+            padw2[axis] = (0, max_seq - c["k_rope"].shape[axis])
+            return dict(c, latent=jnp.pad(c["latent"], padw),
+                        k_rope=jnp.pad(c["k_rope"], padw2))
+        return c
+    return jax.tree_util.tree_map(
+        pad, caches,
+        is_leaf=lambda x: isinstance(x, dict) and ("k" in x or "latent" in x
+                                                   or "ssm" in x or "mlstm" in x
+                                                   or "slstm" in x))
+
+
+def decode_step(params, token: Array, caches: Any, ctx: Ctx,
+                cfg: ArchConfig, *, cross_kv=None):
+    """One decode step. token: (B, 1) int32. Returns (logits, caches)."""
+    x = _embed_tokens(cfg, params, token, ctx)
+    if cfg.learned_pos:
+        pos = _first_pos(caches)
+        x = x + jax.lax.dynamic_slice_in_dim(
+            ctx.cast(params["pos_embed"]), pos, 1)[None, 0:1]
+    x, caches, _ = transformer.apply_stack(
+        params["stack"], x, ctx, cfg, caches=caches, cross_kv=cross_kv)
+    x = _final_norm(cfg, params, x, ctx)
+    return _logits(cfg, params, x, ctx), caches
+
+
+def _first_pos(caches) -> Array:
+    leaves = [v for v in jax.tree_util.tree_leaves(caches)]
+    for leaf in leaves:
+        if leaf.ndim == 1 and leaf.dtype == jnp.int32:
+            return leaf[0]
+    return jnp.zeros((), jnp.int32)
+
+
+def init_decode_caches(cfg: ArchConfig, batch: int, max_seq: int, *,
+                       mode: str = "dense", dtype=jnp.bfloat16,
+                       recent: int = 1024):
+    """Decode caches for the dry-run/serving: "dense" or "clustered"."""
+    if mode == "dense":
+        return transformer.init_cache(cfg, batch, max_seq, dtype=dtype,
+                                      local_ring=True, split_append=256)
+    assert mode == "clustered"
+    subs, n_groups = transformer.group_layout(cfg)
+    hd = cfg.resolved_head_dim
+    kc, cap = clustered_geometry(cfg, max_seq)
+
+    def one(sub):
+        if sub in ("block", "attn_global", "shared_attn"):
+            if cfg.attention == "mla":
+                # MLA latent cache IS the compression; keep dense latents
+                return {"latent": jnp.zeros((batch, max_seq, 256), dtype),
+                        "k_rope": jnp.zeros((batch, max_seq, 32), dtype),
+                        "pos": jnp.zeros((), jnp.int32)}
+            c = kma.init_clustered_cache(batch, cfg.num_kv_heads, hd, kc=kc,
+                                         capacity=cap, recent=recent,
+                                         dtype=dtype)
+            return c
+        if sub == "attn_local":
+            w = cfg.window_size
+            return {"k": jnp.zeros((batch, w, cfg.num_kv_heads, hd), dtype),
+                    "v": jnp.zeros((batch, w, cfg.num_kv_heads, hd), dtype),
+                    "pos": jnp.zeros((), jnp.int32), "ring": jnp.ones((), jnp.bool_)}
+        # recurrent blocks: same as dense
+        return transformer.init_cache(cfg, batch, 1, dtype=dtype)  # placeholder
+
+    # build per-sub caches then stack over groups (recurrent subs reuse
+    # transformer.init_cache geometry)
+    dense = transformer.init_cache(cfg, batch, max_seq, dtype=dtype)
+
+    def pick(key_name, sub, stacked_leafless):
+        return stacked_leafless
+
+    group_cache = {}
+    for i, sub in enumerate(subs):
+        key_name = f"{i}_{sub}"
+        if sub in ("mamba2", "mlstm", "slstm"):
+            group_cache[key_name] = jax.tree_util.tree_map(
+                lambda l: l, _index_group(dense, key_name))
+        else:
+            c = one(sub)
+            group_cache[key_name] = jax.tree_util.tree_map(
+                lambda l: jnp.broadcast_to(l, (n_groups, *l.shape)).copy(), c)
+    return group_cache
+
+
+def _index_group(dense_cache, key_name):
+    return dense_cache[key_name]
+
+
+def clustered_geometry(cfg: ArchConfig, max_seq: int) -> tuple[int, int]:
+    """(num_clusters, per-cluster capacity) for a given context length."""
+    kc = max(cfg.kv_cluster_k, min(1024, max_seq // 512))
+    cap = int(max_seq / kc * cfg.kv_cluster_capacity_factor)
+    cap = max(16, ((cap + 127) // 128) * 128)
+    return kc, cap

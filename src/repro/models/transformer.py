@@ -1,0 +1,469 @@
+"""Composable decoder stack covering all assigned families.
+
+Layers are organized into *groups* so heterogeneous patterns scan cleanly:
+
+  dense/moe/vlm : group = [block] × num_layers
+  gemma2        : group = [local_attn_block, global_attn_block] × L/2
+  xlstm         : group = [mLSTM × (k-1), sLSTM] × L/k
+  zamba2        : group = [mamba2, mamba2, shared_attn_block] × L/3
+                  (shared block params stored ONCE, broadcast into the scan)
+
+Group params are stacked with vmap'd init and the stack is traversed with
+``lax.scan`` (optionally wrapped in ``jax.checkpoint`` for remat) so the
+compiled HLO contains one group body regardless of depth — essential to
+keep 40-cell × 512-device dry-run compiles tractable and real-TPU compile
+times sane.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import common
+from repro.models.common import Ctx
+from repro.models.layers import attention as attn
+from repro.models.layers import mamba2 as m2
+from repro.models.layers import mla as mla_mod
+from repro.models.layers import moe as moe_mod
+from repro.models.layers import xlstm as xl
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Group structure
+# ---------------------------------------------------------------------------
+
+def group_layout(cfg: ArchConfig) -> tuple[list[str], int]:
+    """Returns (sub-block kinds within one group, number of groups)."""
+    if cfg.family == "ssm":
+        k = cfg.slstm_every or cfg.num_layers
+        assert cfg.num_layers % k == 0
+        return ["mlstm"] * (k - 1) + ["slstm"], cfg.num_layers // k
+    if cfg.family == "hybrid":
+        e = cfg.hybrid_attn_every
+        assert cfg.num_layers % e == 0
+        return ["mamba2"] * (e - 1) + ["shared_attn"], cfg.num_layers // e
+    if cfg.attention == "local_global":
+        assert cfg.num_layers % 2 == 0
+        return ["attn_local", "attn_global"], cfg.num_layers // 2
+    return ["block"], cfg.num_layers
+
+
+def _block_kind(cfg: ArchConfig, sub: str) -> str:
+    if sub in ("mlstm", "slstm", "mamba2"):
+        return sub
+    if sub == "shared_attn":
+        return "attn"
+    return "attn"  # attn_local / attn_global / block
+
+
+# ---------------------------------------------------------------------------
+# Single sub-block init/apply
+# ---------------------------------------------------------------------------
+
+def init_subblock(key, cfg: ArchConfig, sub: str):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    if sub == "mlstm":
+        (np_, ns), _ = make_norm_pair(cfg, d)
+        p, s = xl.mlstm_init(ks[0], d, cfg.num_heads,
+                             proj_factor=cfg.mlstm_proj_factor)
+        return {"norm": np_, "core": p}, {"norm": ns, "core": s}
+    if sub == "slstm":
+        (np_, ns), _ = make_norm_pair(cfg, d)
+        p, s = xl.slstm_init(ks[0], d, cfg.num_heads)
+        return {"norm": np_, "core": p}, {"norm": ns, "core": s}
+    if sub == "mamba2":
+        (np_, ns), _ = make_norm_pair(cfg, d)
+        p, s = m2.mamba2_init(ks[0], d, expand=cfg.ssm_expand,
+                              head_dim=cfg.ssm_head_dim,
+                              d_state=cfg.ssm_state,
+                              conv_width=cfg.ssm_conv_width)
+        return {"norm": np_, "core": p}, {"norm": ns, "core": s}
+
+    # attention (+MLP/MoE) transformer block
+    params: dict = {}
+    specs: dict = {}
+    (params["norm_attn"], specs["norm_attn"]), _ = make_norm_pair(cfg, d)
+    if cfg.attention == "mla":
+        p, s = mla_mod.mla_init(
+            ks[0], d, cfg.num_heads, q_lora_rank=768, kv_lora_rank=256,
+            nope_head_dim=64, rope_head_dim=32, v_head_dim=64)
+    else:
+        p, s = attn.attn_init(ks[0], d, cfg.num_heads, cfg.num_kv_heads,
+                              cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias)
+    params["attn"], specs["attn"] = p, s
+    if cfg.post_norm:
+        (params["postnorm_attn"], specs["postnorm_attn"]), _ = \
+            make_norm_pair(cfg, d)
+        (params["postnorm_mlp"], specs["postnorm_mlp"]), _ = \
+            make_norm_pair(cfg, d)
+    (params["norm_mlp"], specs["norm_mlp"]), _ = make_norm_pair(cfg, d)
+    if cfg.num_experts:
+        p, s = moe_mod.moe_init(ks[1], d, cfg.d_ff, cfg.num_experts)
+    elif cfg.mlp_kind != "none":
+        p, s = common.mlp_init(ks[1], d, cfg.d_ff, kind=cfg.mlp_kind)
+    else:
+        p, s = {}, {}
+    params["mlp"], specs["mlp"] = p, s
+    if cfg.cross_attention:
+        p, s = attn.attn_init(ks[2], d, cfg.num_heads, cfg.num_kv_heads,
+                              cfg.resolved_head_dim, qkv_bias=cfg.qkv_bias)
+        params["cross"], specs["cross"] = p, s
+        (params["norm_cross"], specs["norm_cross"]), _ = make_norm_pair(cfg, d)
+    return params, specs
+
+
+def make_norm_pair(cfg: ArchConfig, d: int):
+    return common.make_norm(cfg.norm, d)
+
+
+def _norm(cfg: ArchConfig, params, x, ctx):
+    _, apply = common.make_norm(cfg.norm, cfg.d_model)
+    return apply(params, x, ctx)
+
+
+def apply_subblock(params, x: Array, ctx: Ctx, cfg: ArchConfig, sub: str, *,
+                   positions=None, cache=None, cross_kv=None, causal=True):
+    """Returns (x_out, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    if sub in ("mlstm", "slstm", "mamba2"):
+        h = _norm(cfg, params["norm"], x, ctx)
+        if sub == "mlstm":
+            y, nc = xl.mlstm(params["core"], h, ctx, num_heads=cfg.num_heads,
+                             chunk=cfg.ssm_chunk, cache=cache)
+        elif sub == "slstm":
+            y, nc = xl.slstm(params["core"], h, ctx, num_heads=cfg.num_heads,
+                             cache=cache)
+        else:
+            y, nc = m2.mamba2(params["core"], h, ctx,
+                              head_dim=cfg.ssm_head_dim,
+                              d_state=cfg.ssm_state,
+                              conv_width=cfg.ssm_conv_width,
+                              chunk=cfg.ssm_chunk, cache=cache)
+        return x + y, nc, aux
+
+    # transformer block
+    h = _norm(cfg, params["norm_attn"], x, ctx)
+    window = cfg.window_size if sub == "attn_local" else None
+    rope_theta = None if cfg.learned_pos else cfg.rope_theta
+    if cfg.attention == "mla":
+        y, nc = mla_mod.mla_attention(
+            params["attn"], h, ctx, num_heads=cfg.num_heads,
+            nope_head_dim=64, rope_head_dim=32, v_head_dim=64,
+            kv_lora_rank=256, rope_theta=cfg.rope_theta,
+            positions=positions, cache=cache)
+    elif cfg.kmeans_attn and cache is None and causal:
+        y, nc = _routed_train_attention(params["attn"], h, ctx, cfg,
+                                        rope_theta, positions)
+    elif isinstance(cache, dict) and "centroids" in cache:
+        y, nc = _clustered_decode(params["attn"], h, ctx, cfg, cache,
+                                  rope_theta)
+    elif isinstance(cache, dict) and "blen" in cache:
+        y, nc = _split_decode(params["attn"], h, ctx, cfg, cache,
+                              rope_theta, window=window)
+    elif isinstance(cache, dict) and "ring" in cache:
+        y, nc = _ring_decode(params["attn"], h, ctx, cfg, cache,
+                             rope_theta, window=cfg.window_size)
+    else:
+        y, nc = attn.self_attention(
+            params["attn"], h, ctx, num_heads=cfg.num_heads,
+            num_kv_heads=cfg.num_kv_heads, head_dim=cfg.resolved_head_dim,
+            causal=causal, rope_theta=rope_theta, window=window,
+            softcap=cfg.attn_softcap, scale=cfg.query_scale,
+            positions=positions, cache=cache)
+    if cfg.post_norm:
+        y = _norm(cfg, params["postnorm_attn"], y, ctx)
+    x = x + y
+    if cross_kv is not None:
+        h = _norm(cfg, params["norm_cross"], x, ctx)
+        y = attn.cross_attention(params["cross"], h, cross_kv, ctx,
+                                 num_heads=cfg.num_heads,
+                                 num_kv_heads=cfg.num_kv_heads,
+                                 head_dim=cfg.resolved_head_dim)
+        x = x + y
+    h = _norm(cfg, params["norm_mlp"], x, ctx)
+    if cfg.num_experts:
+        y, aux = moe_mod.moe(params["mlp"], h, ctx,
+                             num_experts=cfg.num_experts,
+                             top_k=cfg.experts_per_token, act=cfg.act,
+                             group_size=cfg.moe_group_size)
+    elif cfg.mlp_kind != "none":
+        y = common.mlp(params["mlp"], h, ctx, kind=cfg.mlp_kind, act=cfg.act)
+    else:
+        y = jnp.zeros_like(x)
+    if cfg.post_norm:
+        y = _norm(cfg, params["postnorm_mlp"], y, ctx)
+    return x + y, nc, aux
+
+
+def _routed_train_attention(p, h, ctx: Ctx, cfg: ArchConfig, rope_theta,
+                            positions):
+    """Train-time cluster-routed sparse attention (cfg.kmeans_attn):
+    flash-kmeans over keys per head, window + same-cluster coverage."""
+    from repro.models import kmeans_attention as kma
+    b, s, _ = h.shape
+    q, k, v = attn.project_qkv(p, h, ctx, num_heads=cfg.num_heads,
+                               num_kv_heads=cfg.num_kv_heads,
+                               head_dim=cfg.resolved_head_dim)
+    if positions is None:
+        positions = jnp.arange(s)[None].repeat(b, axis=0)
+    if rope_theta is not None:
+        q = attn._rope_bshd(q, positions, rope_theta)
+        k = attn._rope_bshd(k, positions, rope_theta)
+    groups = cfg.num_heads // cfg.num_kv_heads
+    k = attn._expand_kv(k, groups)
+    v = attn._expand_kv(v, groups)
+    o = kma.kmeans_routed_attention(
+        q, k, v, clusters=cfg.kv_cluster_k,
+        window=min(cfg.window_size, max(32, s // 8)),
+        scale=cfg.query_scale, impl="ref")
+    return attn.attn_out(p, o, ctx), None
+
+
+def _clustered_decode(p, h, ctx: Ctx, cfg: ArchConfig, cache: dict,
+                      rope_theta):
+    """One-token decode against a flash-kmeans clustered KV cache."""
+    from repro.models import kmeans_attention as kma
+    b, s, _ = h.shape
+    q, k, v = attn.project_qkv(p, h, ctx, num_heads=cfg.num_heads,
+                               num_kv_heads=cfg.num_kv_heads,
+                               head_dim=cfg.resolved_head_dim)
+    if rope_theta is not None:
+        pq = jnp.full((b, s), cache["pos"], jnp.int32)
+        q = attn._rope_bshd(q, pq, rope_theta)
+        k = attn._rope_bshd(k, pq, rope_theta)
+    # (B,1,KH,hd) -> kma expects same layout
+    o, nc = kma.clustered_decode_attention(
+        q, k, v, cache, top=cfg.kv_cluster_top,
+        softcap=cfg.attn_softcap, scale=cfg.query_scale)
+    return attn.attn_out(p, o, ctx), nc
+
+
+def _split_decode(p, h, ctx: Ctx, cfg: ArchConfig, cache: dict, rope_theta,
+                  *, window=None):
+    """Split-KV decode (§Perf llama3-decode/H1): the prefix cache is
+    *frozen* (populated at prefill, shardable along the sequence axis with
+    no in-loop updates, so GSPMD never has to gather it); new tokens append
+    to a small replicated ``recent`` buffer. Attention is one joint softmax
+    over [bulk ++ recent]. The serving engine flushes recent->bulk every R
+    steps (one resharding copy, amortized)."""
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = attn.project_qkv(p, h, ctx, num_heads=cfg.num_heads,
+                               num_kv_heads=cfg.num_kv_heads, head_dim=hd)
+    pos = cache["pos"]
+    if rope_theta is not None:
+        pq = jnp.full((b, s), pos, jnp.int32)
+        q = attn._rope_bshd(q, pq, rope_theta)
+        k = attn._rope_bshd(k, pq, rope_theta)
+    rlen = cache["rlen"]
+    rk = jax.lax.dynamic_update_slice_in_dim(
+        cache["append_k"], k.astype(cache["append_k"].dtype), rlen, axis=1)
+    rv = jax.lax.dynamic_update_slice_in_dim(
+        cache["append_v"], v.astype(cache["append_v"].dtype), rlen, axis=1)
+
+    kh = cfg.num_kv_heads
+    g = cfg.num_heads // kh
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+    qf = q.reshape(b, kh, g, hd)
+
+    def scores_of(kc):
+        sc = jnp.einsum("bkgd,bskd->bkgs", qf, kc).astype(jnp.float32)
+        sc = sc * scale
+        if cfg.attn_softcap is not None:
+            sc = jnp.tanh(sc / cfg.attn_softcap) * cfg.attn_softcap
+        return sc
+
+    sb = scores_of(cache["k"])                       # (B,KH,G,S_bulk) sharded-S
+    sr = scores_of(rk)                               # (B,KH,G,R)
+    blen = cache["blen"]
+    valid_b = jnp.arange(cache["k"].shape[1])[None, None, None] < blen
+    valid_r = jnp.arange(rk.shape[1])[None, None, None] <= rlen
+    if window is not None:
+        kpos_b = jnp.arange(cache["k"].shape[1])[None, None, None]
+        valid_b = valid_b & (kpos_b > pos - window)
+    sb = jnp.where(valid_b, sb, attn.NEG_INF)
+    sr = jnp.where(valid_r, sr, attn.NEG_INF)
+    # joint softmax over the concatenated key axis (XLA reduces over the
+    # sharded bulk axis with small max/sum collectives — no KV gather)
+    m = jnp.maximum(jnp.max(sb, -1, keepdims=True),
+                    jnp.max(sr, -1, keepdims=True))
+    eb, er = jnp.exp(sb - m), jnp.exp(sr - m)
+    denom = jnp.sum(eb, -1, keepdims=True) + jnp.sum(er, -1, keepdims=True)
+    ob = jnp.einsum("bkgs,bskd->bkgd", (eb / denom).astype(cache["v"].dtype),
+                    cache["v"])
+    orc = jnp.einsum("bkgs,bskd->bkgd", (er / denom).astype(rv.dtype), rv)
+    o = (ob + orc).reshape(b, 1, cfg.num_heads, hd)
+    nc = dict(cache, append_k=rk, append_v=rv, rlen=rlen + 1, pos=pos + s)
+    return attn.attn_out(p, o, ctx), nc
+
+
+def _ring_decode(p, h, ctx: Ctx, cfg: ArchConfig, cache: dict, rope_theta,
+                 *, window: int):
+    """Sliding-window decode with a ring-buffer cache of ``window`` slots."""
+    b, s, _ = h.shape
+    hd = cfg.resolved_head_dim
+    q, k, v = attn.project_qkv(p, h, ctx, num_heads=cfg.num_heads,
+                               num_kv_heads=cfg.num_kv_heads, head_dim=hd)
+    pos = cache["pos"]
+    if rope_theta is not None:
+        pq = jnp.full((b, s), pos, jnp.int32)
+        q = attn._rope_bshd(q, pq, rope_theta)
+        k = attn._rope_bshd(k, pq, rope_theta)
+    slot = jnp.mod(pos, window)
+    k_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+    v_c = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+    kh = cfg.num_kv_heads
+    ke = attn._expand_kv(k_c, cfg.num_heads // kh)
+    ve = attn._expand_kv(v_c, cfg.num_heads // kh)
+    scale = cfg.query_scale if cfg.query_scale is not None else hd ** -0.5
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, ke).astype(jnp.float32) * scale
+    if cfg.attn_softcap is not None:
+        scores = jnp.tanh(scores / cfg.attn_softcap) * cfg.attn_softcap
+    valid = jnp.arange(window)[None, None, None] <= pos    # filled slots
+    scores = jnp.where(valid, scores, attn.NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(ve.dtype)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w, ve)
+    nc = dict(cache, k=k_c, v=v_c, pos=pos + s)
+    return attn.attn_out(p, o, ctx), nc
+
+
+# ---------------------------------------------------------------------------
+# Full stack
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg: ArchConfig):
+    """Returns (params, specs) for the decoder stack (no embeddings)."""
+    subs, n_groups = group_layout(cfg)
+    keys = jax.random.split(key, n_groups + 1)
+
+    def init_group(k):
+        gp, gs = {}, {}
+        gks = jax.random.split(k, len(subs))
+        for i, sub in enumerate(subs):
+            if sub == "shared_attn":
+                continue  # stored once outside the stack
+            gp[f"{i}_{sub}"], gs[f"{i}_{sub}"] = init_subblock(gks[i], cfg, sub)
+        return gp, gs
+
+    stacked_p, one_s = None, None
+    ps = [init_group(k) for k in keys[:n_groups]]
+    stacked_p = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *[p for p, _ in ps])
+    one_s = ps[0][1]
+    # stacked specs: add leading layer dim (replicated)
+    stacked_s = jax.tree_util.tree_map(
+        lambda s: (None, *s), one_s,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+    params = {"groups": stacked_p}
+    specs = {"groups": stacked_s}
+    if "shared_attn" in subs:
+        p, s = init_subblock(keys[-1], cfg, "shared_attn")
+        params["shared"], specs["shared"] = p, s
+    return params, specs
+
+
+def apply_stack(params, x: Array, ctx: Ctx, cfg: ArchConfig, *,
+                positions=None, caches=None, cross_kv=None, causal=True,
+                remat: bool = False):
+    """Run all groups. ``caches``: stacked pytree (n_groups leading dim) or
+    None. Returns (x, new_caches, aux_loss)."""
+    subs, n_groups = group_layout(cfg)
+    shared = params.get("shared")
+
+    def group_body(carry, inp):
+        x, aux = carry
+        gp, gc, ck = inp
+        new_gc = {}
+        for i, sub in enumerate(subs):
+            key = f"{i}_{sub}"
+            p = shared if sub == "shared_attn" else gp[key]
+            c = None if gc is None else gc.get(key)
+            sub_ck = None if ck is None else ck.get(key)
+            x, nc, a = apply_subblock(p, x, ctx, cfg, sub,
+                                      positions=positions, cache=c,
+                                      cross_kv=sub_ck, causal=causal)
+            if nc is not None:
+                new_gc[key] = nc
+            aux = aux + a
+        x = ctx.constrain(x, "dp", None, None)
+        return (x, aux), (new_gc or None)
+
+    body = group_body
+    if remat:
+        body = jax.checkpoint(group_body, prevent_cse=False)
+
+    aux0 = jnp.zeros((), jnp.float32)
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, aux0), (params["groups"], caches, cross_kv))
+    return x, new_caches, aux
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16, *, local_ring: bool = False,
+               split_append: int = 0) -> Any:
+    """Stacked decode caches for all groups (standard dense layout).
+
+    ``local_ring``: sliding-window layers get a ring buffer of
+    ``window_size`` slots instead of a full-length cache (decode-only —
+    prefill builds full caches)."""
+    subs, n_groups = group_layout(cfg)
+    hd = cfg.resolved_head_dim
+    d_inner = cfg.ssm_expand * cfg.d_model
+    xl_inner = int(cfg.d_model * cfg.mlstm_proj_factor)
+    xl_hd = xl_inner // cfg.num_heads
+
+    def one(sub):
+        if sub in ("block", "attn_local", "attn_global", "shared_attn"):
+            if cfg.attention == "mla":
+                return {"latent": jnp.zeros((batch, max_seq, 256), dtype),
+                        "k_rope": jnp.zeros((batch, max_seq, 32), dtype),
+                        "pos": jnp.zeros((), jnp.int32)}
+            if sub == "attn_local" and local_ring and max_seq > cfg.window_size:
+                w = cfg.window_size
+                return {"k": jnp.zeros((batch, w, cfg.num_kv_heads, hd), dtype),
+                        "v": jnp.zeros((batch, w, cfg.num_kv_heads, hd), dtype),
+                        "pos": jnp.zeros((), jnp.int32),
+                        "ring": jnp.ones((), jnp.bool_)}
+            out = {"k": jnp.zeros((batch, max_seq, cfg.num_kv_heads, hd), dtype),
+                   "v": jnp.zeros((batch, max_seq, cfg.num_kv_heads, hd), dtype),
+                   "pos": jnp.zeros((), jnp.int32)}
+            if split_append:
+                # frozen shardable bulk + replicated append buffer
+                out.update(
+                    append_k=jnp.zeros((batch, split_append,
+                                        cfg.num_kv_heads, hd), dtype),
+                    append_v=jnp.zeros((batch, split_append,
+                                        cfg.num_kv_heads, hd), dtype),
+                    rlen=jnp.zeros((), jnp.int32),
+                    blen=jnp.asarray(max_seq, jnp.int32))
+            return out
+        if sub == "mamba2":
+            nh = d_inner // cfg.ssm_head_dim
+            return {"ssm": jnp.zeros((batch, nh, cfg.ssm_head_dim,
+                                      cfg.ssm_state), jnp.float32),
+                    "conv": jnp.zeros((batch, cfg.ssm_conv_width - 1,
+                                       d_inner + 2 * cfg.ssm_state), dtype)}
+        if sub == "mlstm":
+            return {"mlstm": (
+                jnp.zeros((batch, cfg.num_heads, xl_hd, xl_hd), jnp.float32),
+                jnp.zeros((batch, cfg.num_heads, xl_hd), jnp.float32),
+                jnp.zeros((batch, cfg.num_heads), jnp.float32))}
+        if sub == "slstm":
+            dh = cfg.d_model // cfg.num_heads
+            z = jnp.zeros((batch, cfg.num_heads, dh), jnp.float32)
+            return {"slstm": (z, z, z, z)}
+        raise ValueError(sub)
+
+    group_cache = {f"{i}_{sub}": one(sub) for i, sub in enumerate(subs)}
+    return jax.tree_util.tree_map(
+        lambda leaf: jnp.broadcast_to(leaf, (n_groups, *leaf.shape)).copy()
+        if hasattr(leaf, "shape") else leaf, group_cache)

@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Built here (no optax dependency). States mirror the parameter tree, so
+the FSDP/TP parameter shardings apply verbatim to (m, v).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+
+
+def init(params: Any) -> dict:
+    zeros = lambda p: jnp.zeros_like(p)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2) for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def update(params: Any, grads: Any, state: dict, lr: Array,
+           cfg: AdamWConfig = AdamWConfig()) -> tuple[Any, dict]:
+    if cfg.clip_norm:
+        grads, _ = clip_by_global_norm(grads, cfg.clip_norm)
+    count = state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        step = (m / b1c) / (jnp.sqrt(v / b2c) + cfg.eps)
+        new_p = p - lr * (step + cfg.weight_decay * p)
+        return new_p.astype(p.dtype), m, v
+
+    out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+    flat, treedef = jax.tree_util.tree_flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 3
+        and all(hasattr(e, "shape") for e in x))
+    new_p = jax.tree_util.tree_unflatten(treedef, [t[0] for t in flat])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in flat])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in flat])
+    return new_p, {"m": new_m, "v": new_v, "count": count}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    min_frac: float = 0.1):
+    def lr(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = base_lr * jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, base_lr * cos)
+    return lr

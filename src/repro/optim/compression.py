@@ -1,0 +1,78 @@
+"""Gradient / statistics compression for slow (cross-pod) links.
+
+``ef_quantized_allreduce`` implements error-feedback int8 compression for
+use *inside shard_map*: each participant quantizes its residual-corrected
+contribution to int8 with per-block scales, exchanges the int8 payload via
+all_gather (wire bytes = P * n/4 instead of the ~2n of a ring all-reduce —
+a win for small P, i.e. the pod axis), dequantizes and sums locally. The
+quantization error is fed back into the next call's input, so the scheme
+is unbiased over time (standard EF-SGD result).
+
+Used by the multi-pod distributed k-means reduction (cross-pod (s, n)
+statistics) and available to the trainer's hierarchical grad sync.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+BLOCK = 256
+
+
+def quantize_int8(x: Array) -> tuple[Array, Array]:
+    """Per-block symmetric int8. x: any shape -> (q int8, scales f32)."""
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: Array, scale: Array, shape) -> Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = 1
+    for d in shape:
+        n *= d
+    return flat[:n].reshape(shape)
+
+
+def ef_quantized_allreduce(x: Array, err: Array, axis_name: str
+                           ) -> tuple[Array, Array]:
+    """Error-feedback int8 all-reduce over ``axis_name`` (inside shard_map).
+
+    Returns (summed f32, new error-feedback residual)."""
+    xe = x.astype(jnp.float32) + err
+    q, scale = quantize_int8(xe)
+    deq_self = dequantize_int8(q, scale, x.shape)
+    new_err = xe - deq_self
+    qg = jax.lax.all_gather(q, axis_name)          # int8 on the wire
+    sg = jax.lax.all_gather(scale, axis_name)      # tiny f32 sidecar
+    total = jax.vmap(lambda qq, ss: dequantize_int8(qq, ss, x.shape))(qg, sg)
+    return jnp.sum(total, axis=0), new_err
+
+
+def ef_tree_allreduce(tree: Any, err_tree: Any, axis_name: str
+                      ) -> tuple[Any, Any]:
+    pairs = jax.tree_util.tree_map(
+        lambda x, e: ef_quantized_allreduce(x, e, axis_name), tree, err_tree)
+    summed = jax.tree_util.tree_map(lambda p: p[0], pairs,
+                                    is_leaf=lambda p: isinstance(p, tuple)
+                                    and len(p) == 2 and hasattr(p[0], "shape"))
+    errs = jax.tree_util.tree_map(lambda p: p[1], pairs,
+                                  is_leaf=lambda p: isinstance(p, tuple)
+                                  and len(p) == 2 and hasattr(p[0], "shape"))
+    return summed, errs
+
+
+def init_error_tree(tree: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, jnp.float32), tree)

@@ -1,0 +1,109 @@
+"""Batched serving engine: prefill + greedy/temperature decode, with an
+optional flash-kmeans clustered-KV mode for long contexts.
+
+In clustered mode the engine:
+  1. runs dense prefill,
+  2. clusters each layer's cached keys with flash-kmeans and rebuilds the
+     cache in bucketed (sort-inverse) layout,
+  3. decodes against the clustered cache; new tokens accumulate in a
+     recent buffer and trigger periodic re-clustering when it fills.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import kmeans_attention as kma
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.models.common import Ctx
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class ServeConfig:
+    max_seq: int = 2048
+    mode: str = "dense"           # dense | clustered
+    recent: int = 128
+    kmeans_iters: int = 4
+    temperature: float = 0.0      # 0 = greedy
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params: Any, scfg: ServeConfig,
+                 mesh=None, compute_dtype=jnp.float32):
+        self.cfg = cfg
+        self.scfg = scfg
+        self.params = params
+        self.ctx = Ctx(mesh=mesh, compute_dtype=compute_dtype)
+        self._prefill = jax.jit(functools.partial(
+            M.prefill, ctx=self.ctx, cfg=cfg, max_seq=scfg.max_seq))
+        self._decode = jax.jit(functools.partial(
+            M.decode_step, ctx=self.ctx, cfg=cfg))
+
+    # ------------------------------------------------------------------
+
+    def _cluster_caches(self, caches, seq_len: int):
+        """Convert dense prefill caches to clustered layout."""
+        cfg, scfg = self.cfg, self.scfg
+        kc, cap = M.clustered_geometry(cfg, seq_len)
+        kc = min(kc, max(4, seq_len // 8))
+        hd = cfg.resolved_head_dim
+
+        def convert(sub_cache):
+            if not (isinstance(sub_cache, dict) and "k" in sub_cache):
+                return sub_cache
+
+            def one(k_, v_, pos):
+                c = kma.build_clustered_cache(
+                    k_[:, :seq_len], v_[:, :seq_len], kc=kc, capacity=cap,
+                    iters=scfg.kmeans_iters)
+                b = k_.shape[0]
+                c.update(
+                    recent_k=jnp.zeros((b, cfg.num_kv_heads, scfg.recent,
+                                        hd), k_.dtype),
+                    recent_v=jnp.zeros((b, cfg.num_kv_heads, scfg.recent,
+                                        hd), k_.dtype),
+                    rlen=jnp.zeros((), jnp.int32), pos=pos)
+                return c
+
+            return jax.vmap(one)(sub_cache["k"], sub_cache["v"],
+                                 sub_cache["pos"])
+
+        return jax.tree_util.tree_map(
+            convert, caches,
+            is_leaf=lambda x: isinstance(x, dict) and ("k" in x or "ssm" in x
+                                                       or "mlstm" in x
+                                                       or "slstm" in x
+                                                       or "latent" in x))
+
+    # ------------------------------------------------------------------
+
+    def generate(self, tokens: Array, steps: int, *,
+                 frontend: Array | None = None, key=None) -> Array:
+        """tokens: (B, S) prompt -> (B, steps) generated ids."""
+        logits, caches, cross = self._prefill(self.params, tokens,
+                                              frontend=frontend)
+        if self.scfg.mode == "clustered":
+            caches = self._cluster_caches(caches, tokens.shape[1])
+        out = []
+        tok = self._sample(logits[:, -1], key, 0)
+        for i in range(steps):
+            out.append(tok)
+            logits, caches = self._decode(self.params, tok, caches,
+                                          cross_kv=cross)
+            tok = self._sample(logits[:, 0], key, i + 1)
+        return jnp.concatenate(out, axis=1)
+
+    def _sample(self, logits: Array, key, i: int) -> Array:
+        if self.scfg.temperature <= 0 or key is None:
+            return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        k = jax.random.fold_in(key, i)
+        return jax.random.categorical(
+            k, logits / self.scfg.temperature)[:, None].astype(jnp.int32)

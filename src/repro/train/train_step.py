@@ -1,0 +1,83 @@
+"""train_step / serve_step factories with explicit shardings.
+
+These are the functions the dry-run lowers and the trainer executes:
+  train_step(params, opt_state, batch, step) -> (params, opt_state, metrics)
+  serve_step(params, token, caches)          -> (logits, caches)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import model as M
+from repro.models.common import Ctx
+from repro.optim import adamw
+
+Array = jax.Array
+
+
+def make_train_step(cfg: ArchConfig, mesh=None, *,
+                    compute_dtype=jnp.bfloat16, remat: bool = True,
+                    lr_schedule=None, adamw_cfg=adamw.AdamWConfig(),
+                    mixed_precision: bool | None = None):
+    """``mixed_precision`` (default: on when compute_dtype is bf16):
+    differentiate a bf16 *cast copy* of the f32 master params, so the FSDP
+    parameter all-gathers AND the gradient all-reduces move bf16 on the
+    wire (2x collective-byte reduction) while AdamW still updates f32
+    masters."""
+    ctx = Ctx(mesh=mesh, compute_dtype=compute_dtype)
+    lr_fn = lr_schedule or adamw.cosine_schedule(3e-4, 100, 10000)
+    if mixed_precision is None:
+        mixed_precision = compute_dtype == jnp.bfloat16
+
+    def train_step(params, opt_state, batch, step):
+        if mixed_precision:
+            cast = lambda p: (p.astype(compute_dtype)
+                              if jnp.issubdtype(p.dtype, jnp.floating) else p)
+            params_c = jax.tree_util.tree_map(cast, params)
+        else:
+            params_c = params
+
+        def loss_f(pc):
+            return M.loss_fn(pc, batch, ctx, cfg, remat=remat)
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_f, has_aux=True)(params_c)
+        if mixed_precision:
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.float32), grads)
+        new_params, new_opt = adamw.update(params, grads, opt_state,
+                                           lr_fn(step), adamw_cfg)
+        metrics = dict(metrics, loss=loss,
+                       grad_norm=adamw.global_norm(grads))
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ArchConfig, mesh=None, *,
+                    compute_dtype=jnp.bfloat16):
+    """One-token decode step (used for decode_32k / long_500k cells)."""
+    ctx = Ctx(mesh=mesh, compute_dtype=compute_dtype)
+
+    def serve_step(params, token, caches, cross_kv=None):
+        logits, caches = M.decode_step(params, token, caches, ctx, cfg,
+                                       cross_kv=cross_kv)
+        return logits, caches
+
+    return serve_step
+
+
+def make_prefill(cfg: ArchConfig, mesh=None, *, max_seq: int,
+                 compute_dtype=jnp.bfloat16):
+    ctx = Ctx(mesh=mesh, compute_dtype=compute_dtype)
+
+    def prefill_step(params, tokens, frontend=None):
+        return M.prefill(params, tokens, ctx, cfg, max_seq=max_seq,
+                         frontend=frontend)
+
+    return prefill_step

@@ -1,0 +1,99 @@
+"""Logical-axis sharding: layers declare *logical* specs, the launcher maps
+them onto the physical mesh with divisibility fallbacks.
+
+Logical axes:
+  "fsdp"  — parameter/optimizer sharding over the data-parallel axes
+  "tp"    — tensor parallelism (heads / d_ff / experts / vocab)
+  "dp"    — batch dimension of activations
+  "sp"    — sequence dimension (long-context / KV-cache sharding)
+  None    — replicated
+
+A spec is a tuple of logical names per dim, e.g. ("fsdp", "tp") for a
+(D, F) matmul weight. ``resolve`` turns logical specs into
+``PartitionSpec``s for a concrete mesh, dropping any logical axis whose
+mapped mesh-axis product does not divide the dim size (GSPMD requires even
+shards) — the fallback is replication on that dim, never an error.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical -> tuple of physical mesh axis names (order matters)
+DEFAULT_RULES = {
+    "fsdp": ("data",),
+    "tp": ("model",),
+    "dp": ("pod", "data"),
+    "sp": ("data",),
+    "mdl": ("model",),     # explicit model-axis placement (e.g. KV seq split)
+    "expert": ("model",),
+}
+
+
+def rules_for_mesh(mesh: Mesh) -> dict:
+    rules = dict(DEFAULT_RULES)
+    if "pod" in mesh.axis_names:
+        rules["fsdp"] = ("pod", "data")   # FSDP spans pods too
+        rules["dp"] = ("pod", "data")
+    else:
+        rules["dp"] = ("data",)
+    return rules
+
+
+def _mesh_size(mesh: Mesh, axes: Sequence[str]) -> int:
+    return math.prod(mesh.shape[a] for a in axes if a in mesh.axis_names)
+
+
+def resolve_spec(logical: tuple, shape: tuple, mesh: Mesh,
+                 rules: dict | None = None) -> P:
+    """Map one logical spec tuple onto a PartitionSpec for ``shape``."""
+    rules = rules or rules_for_mesh(mesh)
+    out = []
+    used: set[str] = set()
+    for dim, name in enumerate(logical):
+        if name is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in rules.get(name, ())
+                     if a in mesh.axis_names and a not in used)
+        if not axes:
+            out.append(None)
+            continue
+        size = _mesh_size(mesh, axes)
+        if size <= 1 or shape[dim] % size != 0:
+            # try a prefix of the axes (e.g. fsdp=(pod,data) -> (pod,))
+            while axes and (shape[dim] % _mesh_size(mesh, axes) != 0
+                            or _mesh_size(mesh, axes) <= 1):
+                axes = axes[:-1]
+            if not axes:
+                out.append(None)
+                continue
+        used.update(axes)
+        out.append(axes if len(axes) > 1 else axes[0])
+    return P(*out)
+
+
+def resolve_tree(logical_tree: Any, params: Any, mesh: Mesh,
+                 rules: dict | None = None) -> Any:
+    """Map a pytree of logical specs over a matching params pytree."""
+    rules = rules or rules_for_mesh(mesh)
+    return jax.tree_util.tree_map(
+        lambda spec, p: resolve_spec(spec, p.shape, mesh, rules),
+        logical_tree, params,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def named_tree(spec_tree: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh: Mesh, *logical, rules: dict | None = None):
+    """with_sharding_constraint using logical names for activations."""
+    spec = resolve_spec(tuple(logical), x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,33 @@
+import os
+
+# Keep unit tests on the single real CPU device (the dry-run sets its own
+# fake-device flag in a separate process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture()
+def key():
+    return jax.random.PRNGKey(0)
+
+
+def assert_assignments_match(x, c, a_test, a_ref, tol=1e-3):
+    """Assignments may differ only on numerical near-ties."""
+    import jax.numpy as jnp
+    from repro.kernels.ref import pairwise_sq_dists
+    d = np.asarray(pairwise_sq_dists(x, c))
+    a_test = np.asarray(a_test)
+    a_ref = np.asarray(a_ref)
+    bad = []
+    for i in np.nonzero(a_test != a_ref)[0]:
+        if abs(d[i, a_test[i]] - d[i, a_ref[i]]) > tol:
+            bad.append(i)
+    assert not bad, f"{len(bad)} true mismatches, first {bad[:5]}"

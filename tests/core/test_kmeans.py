@@ -1,0 +1,106 @@
+"""Lloyd-loop invariants and end-to-end clustering quality."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KMeans, KMeansConfig, init_centroids, lloyd_step)
+
+
+def blobs(key, n=1200, k=6, d=8, spread=6.0, noise=0.25):
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * spread
+    assign = jax.random.randint(ka, (n,), 0, k)
+    return centers[assign] + jax.random.normal(kn, (n, d)) * noise, centers
+
+
+def test_recovers_blobs(key):
+    x, true_c = blobs(key)
+    km = KMeans(KMeansConfig(k=6, max_iters=30, init="kmeans++"))
+    st_ = km.fit(jax.random.PRNGKey(7), x)
+    # inertia should approach n * d * noise^2
+    assert float(st_.inertia) / x.shape[0] < 8 * 0.25**2 * 2.5
+
+
+def test_inertia_monotone(key):
+    x, _ = blobs(key, n=800, k=5)
+    cfg = KMeansConfig(k=5, max_iters=1)
+    km = KMeans(cfg)
+    c = init_centroids(jax.random.PRNGKey(1), x, 5, "random")
+    prev = np.inf
+    for _ in range(10):
+        c, a, j = km.iterate(x, c)
+        assert float(j) <= prev + 1e-2
+        prev = float(j)
+
+
+def test_fixed_point_stability(key):
+    """Once assignments stop changing, centroids stop moving."""
+    x, _ = blobs(key, n=400, k=4)
+    km = KMeans(KMeansConfig(k=4, max_iters=50, tol=0.0))
+    st_ = km.fit(jax.random.PRNGKey(2), x)
+    c2, a2, _ = km.iterate(x, st_.centroids)
+    if bool(jnp.all(a2 == st_.assignments)):
+        np.testing.assert_allclose(np.asarray(c2),
+                                   np.asarray(st_.centroids),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_impl_equivalence(key):
+    """flash+sort_inverse == ref+scatter step-by-step."""
+    x, _ = blobs(key, n=500, k=8, d=16)
+    c0 = init_centroids(jax.random.PRNGKey(3), x, 8, "random")
+    cfgs = [KMeansConfig(k=8, assign_impl="flash",
+                         update_impl="sort_inverse"),
+            KMeansConfig(k=8, assign_impl="ref", update_impl="scatter"),
+            KMeansConfig(k=8, assign_impl="flash",
+                         update_impl="dense_onehot")]
+    outs = [lloyd_step(x, c0, cfg) for cfg in cfgs]
+    for c_new, a, j in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0][0]),
+                                   np.asarray(c_new), rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(float(outs[0][2]), float(j), rtol=1e-5)
+
+
+def test_batched_matches_loop(key):
+    xb = jnp.stack([blobs(jax.random.fold_in(key, i), n=300, k=4)[0]
+                    for i in range(3)])
+    km = KMeans(KMeansConfig(k=4, max_iters=10))
+    stb = km.fit_batched(jax.random.PRNGKey(5), xb)
+    keys = jax.random.split(jax.random.PRNGKey(5), 3)
+    for i in range(3):
+        sti = km.fit(keys[i], xb[i])
+        np.testing.assert_allclose(float(stb.inertia[i]),
+                                   float(sti.inertia), rtol=1e-5)
+
+
+def test_kmeans_pp_better_than_random(key):
+    x, _ = blobs(key, n=1500, k=10, d=12, spread=10.0)
+    j = {}
+    for init in ("random", "kmeans++"):
+        km = KMeans(KMeansConfig(k=10, max_iters=2, init=init))
+        j[init] = float(km.fit(jax.random.PRNGKey(11), x).inertia)
+    assert j["kmeans++"] <= j["random"] * 1.5
+
+
+def test_empty_cluster_keeps_centroid(key):
+    x = jax.random.normal(key, (50, 4))
+    c0 = jnp.concatenate([x[:3], jnp.full((1, 4), 100.0)])  # far centroid
+    c1, a, _ = lloyd_step(x, c0, KMeansConfig(k=4))
+    assert not bool(jnp.any(a == 3))
+    np.testing.assert_allclose(np.asarray(c1[3]), 100.0)
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(n=st.integers(20, 300), k=st.integers(2, 12),
+                  seed=st.integers(0, 99))
+def test_property_assignment_partition(n, k, seed):
+    """Every point assigned to exactly one in-range cluster."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 6))
+    km = KMeans(KMeansConfig(k=k, max_iters=3))
+    st_ = km.fit(jax.random.PRNGKey(seed + 1), x)
+    a = np.asarray(st_.assignments)
+    assert a.shape == (n,)
+    assert a.min() >= 0 and a.max() < k

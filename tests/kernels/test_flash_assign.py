@@ -1,0 +1,94 @@
+"""FlashAssign kernel vs materialized reference: shape/dtype sweeps and
+hypothesis property tests (interpret mode on CPU)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from tests.conftest import assert_assignments_match
+
+
+def _data(n, k, d, dtype=jnp.float32, seed=0):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, d), dtype)
+    c = jax.random.normal(kc, (k, d), dtype)
+    return x, c
+
+
+SHAPES = [
+    (16, 4, 2), (100, 7, 3), (256, 64, 32), (1000, 37, 19),
+    (513, 1000, 33), (4096, 512, 64), (333, 17, 257),
+]
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+def test_sweep_f32(n, k, d):
+    x, c = _data(n, k, d)
+    a, m = ops.flash_assign(x, c, block_n=128, block_k=64)
+    a_ref, m_ref = ref.assign_ref(x, c)
+    assert_assignments_match(x, c, a, a_ref)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(m_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,k,d", [(256, 64, 32), (100, 7, 3)])
+def test_sweep_bf16(n, k, d):
+    x, c = _data(n, k, d, jnp.bfloat16)
+    a, m = ops.flash_assign(x, c, block_n=64, block_k=32)
+    a_ref, m_ref = ref.assign_ref(x, c)
+    # bf16: compare distances, allow near-tie index swaps with loose tol
+    assert_assignments_match(x.astype(jnp.float32), c.astype(jnp.float32),
+                             a, a_ref, tol=0.2)
+
+
+@pytest.mark.parametrize("bn,bk", [(8, 8), (128, 128), (256, 512)])
+def test_block_shape_invariance(bn, bk):
+    x, c = _data(300, 50, 16)
+    a0, m0 = ops.flash_assign(x, c, block_n=8, block_k=8)
+    a1, m1 = ops.flash_assign(x, c, block_n=bn, block_k=bk)
+    assert_assignments_match(x, c, a1, a0)
+    np.testing.assert_allclose(np.asarray(m0), np.asarray(m1),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_batched():
+    kx = jax.random.PRNGKey(3)
+    x = jax.random.normal(kx, (3, 128, 8))
+    c = jax.random.normal(jax.random.fold_in(kx, 1), (3, 16, 8))
+    a, m = ops.flash_assign_batched(x, c, block_n=64, block_k=16)
+    for b in range(3):
+        a_ref, _ = ref.assign_ref(x[b], c[b])
+        assert_assignments_match(x[b], c[b], a[b], a_ref)
+
+
+def test_min_dists_nonnegative():
+    x, c = _data(200, 10, 5)
+    _, m = ops.flash_assign(x, c)
+    assert np.all(np.asarray(m) >= 0.0)
+
+
+def test_identical_points_zero_distance():
+    c = jax.random.normal(jax.random.PRNGKey(1), (13, 7))
+    x = jnp.tile(c, (4, 1))  # every point IS some centroid
+    a, m = ops.flash_assign(x, c, block_n=16, block_k=8)
+    np.testing.assert_allclose(np.asarray(m), 0.0, atol=1e-4)
+    assert np.array_equal(np.asarray(a), np.tile(np.arange(13), 4))
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 200), k=st.integers(1, 60), d=st.integers(1, 24),
+    seed=st.integers(0, 10_000))
+def test_property_exact_argmin(n, k, d, seed):
+    x, c = _data(n, k, d, seed=seed)
+    a, m = ops.flash_assign(x, c, block_n=32, block_k=16)
+    dmat = np.asarray(ref.pairwise_sq_dists(x, c))
+    a = np.asarray(a)
+    # each assignment achieves (near-)minimal distance
+    chosen = dmat[np.arange(n), a]
+    best = dmat.min(axis=1)
+    np.testing.assert_allclose(chosen, best, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(m), best, rtol=1e-4, atol=1e-4)

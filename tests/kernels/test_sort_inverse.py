@@ -1,0 +1,112 @@
+"""Sort-inverse update kernel vs scatter oracle: exactness of counts,
+allclose sums, degenerate distributions, hypothesis properties."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _data(n, k, d, seed=0, skew=False):
+    kx, ka = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, d))
+    if skew:  # hot-cluster regime (the paper's atomic-contention case)
+        a = jnp.minimum(
+            jax.random.geometric(ka, 0.5, (n,)) - 1, k - 1).astype(jnp.int32)
+    else:
+        a = jax.random.randint(ka, (n,), 0, k, jnp.int32)
+    return x, a
+
+
+SHAPES = [(64, 4, 2), (256, 16, 8), (1000, 37, 19), (513, 100, 33),
+          (2048, 512, 64), (100, 1000, 7)]
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+def test_sweep(n, k, d):
+    x, a = _data(n, k, d)
+    s, cnt = ops.sort_inverse_update(x, a, k=k, block_n=128, block_k=64)
+    s_ref, cnt_ref = ref.update_scatter_ref(x, a, k)
+    assert np.array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("n,k,d", [(1000, 64, 16), (512, 8, 4)])
+def test_hot_cluster_skew(n, k, d):
+    """All mass concentrated on few clusters — the contention case."""
+    x, a = _data(n, k, d, skew=True)
+    s, cnt = ops.sort_inverse_update(x, a, k=k, block_n=64, block_k=32)
+    s_ref, cnt_ref = ref.update_scatter_ref(x, a, k)
+    assert np.array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_single_cluster():
+    x, _ = _data(300, 1, 5)
+    a = jnp.zeros((300,), jnp.int32)
+    s, cnt = ops.sort_inverse_update(x, a, k=1, block_n=64, block_k=8)
+    assert cnt[0] == 300
+    np.testing.assert_allclose(np.asarray(s[0]),
+                               np.asarray(jnp.sum(x, 0)), rtol=1e-5)
+
+
+def test_empty_clusters():
+    x, _ = _data(100, 50, 3)
+    a = jnp.full((100,), 7, jnp.int32)  # only cluster 7 populated
+    s, cnt = ops.sort_inverse_update(x, a, k=50, block_n=32, block_k=16)
+    cnt = np.asarray(cnt)
+    assert cnt[7] == 100 and cnt.sum() == 100
+    assert np.all(np.asarray(s)[np.arange(50) != 7] == 0)
+
+
+def test_block_shape_invariance():
+    x, a = _data(777, 33, 11)
+    s0, c0 = ops.sort_inverse_update(x, a, k=33, block_n=8, block_k=8)
+    s1, c1 = ops.sort_inverse_update(x, a, k=33, block_n=256, block_k=128)
+    assert np.array_equal(np.asarray(c0), np.asarray(c1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_dense_onehot_matches_scatter():
+    x, a = _data(500, 20, 6)
+    s0, c0 = ref.update_dense_onehot_ref(x, a, 20)
+    s1, c1 = ref.update_scatter_ref(x, a, 20)
+    assert np.array_equal(np.asarray(c0), np.asarray(c1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-5, atol=1e-4)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(n=st.integers(1, 300), k=st.integers(1, 80),
+                  d=st.integers(1, 16), seed=st.integers(0, 10_000))
+def test_property_sufficient_statistics(n, k, d, seed):
+    x, a = _data(n, k, d, seed=seed)
+    s, cnt = ops.sort_inverse_update(x, a, k=k, block_n=32, block_k=16)
+    s_ref, cnt_ref = ref.update_scatter_ref(x, a, k)
+    assert np.array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=1e-4, atol=1e-4)
+    # mass conservation
+    np.testing.assert_allclose(np.asarray(cnt).sum(), n)
+    np.testing.assert_allclose(np.asarray(s).sum(0),
+                               np.asarray(x.sum(0)), rtol=1e-4, atol=1e-3)
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(seed=st.integers(0, 1000))
+def test_property_permutation_invariance(seed):
+    """Shuffling the points must not change the statistics."""
+    x, a = _data(257, 13, 5, seed=seed)
+    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), 257)
+    s0, c0 = ops.sort_inverse_update(x, a, k=13, block_n=64, block_k=16)
+    s1, c1 = ops.sort_inverse_update(x[perm], a[perm], k=13,
+                                     block_n=64, block_k=16)
+    assert np.array_equal(np.asarray(c0), np.asarray(c1))
+    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,76 @@
+"""End-to-end system tests: the public API as users consume it."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KMeans, KMeansConfig
+
+
+def test_quickstart_flow(key):
+    """The README quickstart: fit, predict, iterate."""
+    centers = jax.random.normal(key, (5, 16)) * 6
+    x = (centers[jax.random.randint(jax.random.fold_in(key, 1),
+                                    (1500,), 0, 5)]
+         + jax.random.normal(jax.random.fold_in(key, 2), (1500, 16)) * 0.3)
+    km = KMeans(KMeansConfig(k=5, max_iters=25, init="kmeans++"))
+    st = km.fit(jax.random.PRNGKey(0), x)
+    assert int(st.iteration) <= 25
+    # prediction is stable under refit centroids
+    a = km.predict(x, st.centroids)
+    assert np.array_equal(np.asarray(a), np.asarray(st.assignments))
+    # recovered centroids ~ true centers (up to permutation)
+    d = np.linalg.norm(np.asarray(st.centroids)[:, None]
+                       - np.asarray(centers)[None], axis=-1)
+    assert d.min(axis=1).max() < 0.5
+
+
+def test_online_invocation_latency_path(key):
+    """k-means as an online operator: jitted single-iteration reuse."""
+    km = KMeans(KMeansConfig(k=16, max_iters=1))
+    x = jax.random.normal(key, (2048, 64))
+    c = x[:16]
+    for _ in range(3):
+        c, a, j = km.iterate(x, c)  # no recompile across calls
+    assert c.shape == (16, 64)
+
+
+def test_train_example_converges(key):
+    """Mini end-to-end LM training run (the examples/train_lm.py path)."""
+    from repro.configs.base import get_config
+    from repro.data.pipeline import DataConfig, SyntheticPipeline
+    from repro.models import model as M
+    from repro.optim import adamw
+    from repro.train.train_step import make_train_step
+
+    cfg = get_config("llama3-8b").reduced()
+    params, _ = M.init_model(key, cfg, max_pos=64)
+    opt = adamw.init(params)
+    pipe = SyntheticPipeline(DataConfig(seed=0, vocab_size=cfg.vocab_size,
+                                        batch=4, seq_len=32))
+    step = jax.jit(make_train_step(
+        cfg, None, compute_dtype=jnp.float32, remat=False,
+        lr_schedule=adamw.cosine_schedule(1e-3, 5, 40)))
+    losses = []
+    for i in range(25):
+        params, opt, m = step(params, opt, pipe.batch_at(i),
+                              jnp.asarray(i, jnp.int32))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.1, losses[::6]
+
+
+def test_compression_error_feedback(key):
+    """int8 EF quantization: biased per-call, unbiased over repetition."""
+    from repro.optim import compression as C
+    x = jax.random.normal(key, (1000,)) * 3
+    q, s = C.quantize_int8(x)
+    back = C.dequantize_int8(q, s, x.shape)
+    rel = float(jnp.linalg.norm(back - x) / jnp.linalg.norm(x))
+    assert rel < 0.01  # int8 with per-256 block scales
+    # error feedback accumulates the residual exactly
+    err = x - back
+    q2, s2 = C.quantize_int8(x + err)
+    back2 = C.dequantize_int8(q2, s2, x.shape)
+    rel2 = float(jnp.linalg.norm((back + back2) / 2 - x)
+                 / jnp.linalg.norm(x))
+    assert rel2 <= rel
