@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 from benchmarks import common as C
 from repro.core import KMeansConfig, lloyd_step
+from repro.core.heuristics import choose_step_impl
 from repro.kernels import ref
 
 REGIMES = [
@@ -51,6 +52,20 @@ def rows() -> list[str]:
     # wall time is not meaningful and is never reported as a speedup. The
     # e2e comparison below is modeled on the TPU roofline (common.py).
 
+    # CPU wall: fused single-pass vs two-pass on the same shape (both are
+    # interpret-mode Pallas emulations compiled by XLA — relative only)
+    cfg_fused = KMeansConfig(k=CPU_K, step_impl="fused")
+    cfg_two = KMeansConfig(k=CPU_K, step_impl="two_pass")
+    us_fused = C.wall_us(
+        jax.jit(lambda xx, cc: lloyd_step(xx, cc, cfg_fused)), x, c0, reps=3)
+    us_two = C.wall_us(
+        jax.jit(lambda xx, cc: lloyd_step(xx, cc, cfg_two)), x, c0, reps=3)
+    out.append(C.fmt_row("e2e_cpu_two_pass_iteration", us_two,
+                         f"N={CPU_N},K={CPU_K},d={CPU_D};interpret"))
+    out.append(C.fmt_row(
+        "e2e_cpu_fused_iteration", us_fused,
+        f"wall_ratio_two_pass/fused={us_two/us_fused:.2f}x"))
+
     for name, n, k, d, b in REGIMES:
         t_std, t_ours = _modeled_iteration(n, k, d, b)
         out.append(C.fmt_row(f"e2e_std_{name}", t_std * 1e6,
@@ -58,6 +73,16 @@ def rows() -> list[str]:
         out.append(C.fmt_row(
             f"e2e_flash_{name}", t_ours * 1e6,
             f"modeled_speedup={t_std/t_ours:.1f}x;paper_best=17.9x"))
+        # fused single-pass Lloyd: one Nd HBM stream per iteration; the
+        # heuristic only selects it where it wins (see DESIGN.md)
+        t_fused = C.modeled_time_s(C.lloyd_flops_fused(n, k, d) * b,
+                                   C.lloyd_bytes_fused(n, k, d) * b)
+        out.append(C.fmt_row(
+            f"e2e_fused_{name}", t_fused * 1e6,
+            f"modeled_speedup_vs_std={t_std/t_fused:.1f}x;"
+            f"io_bytes={C.lloyd_bytes_fused(n, k, d) * b:.3g}"
+            f"_vs_two_pass={C.lloyd_bytes_two_pass(n, k, d) * b:.3g};"
+            f"heuristic={choose_step_impl(n, k, d)}"))
 
     # memory-wall demonstration (paper §1: N=65536,K=1024,d=128,B=32)
     n, k, d, b = 65536, 1024, 128, 32

@@ -12,6 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common as C
+from repro.core.heuristics import choose_step_impl
 from repro.kernels import ops, ref
 
 # paper's Fig-4 configs (D=128); CPU-walled at reduced N, modeled at full N
@@ -21,6 +22,10 @@ ASSIGN_CONFIGS = [
 ]
 UPDATE_CONFIGS = [
     (262144, 1024), (1048576, 4096), (33554432, 4096),
+]
+FUSED_CONFIGS = [
+    # fused-eligible (K·d accumulator fits VMEM) and one fallback case
+    (262144, 1024), (1048576, 4096), (1048576, 65536),
 ]
 D = 128
 CPU_CAP = 50_000   # wall-clock measurements capped at this N
@@ -71,6 +76,48 @@ def rows() -> list[str]:
             f"update_sort_inverse_N{n}_K{k}", t_si * 1e6,
             f"modeled_speedup={t_sc/t_si:.1f}x;paper_claims<=6.3x"))
 
+    # --- fused Lloyd step vs two-pass (assign + sort-inverse) -----------
+    # modeled HBM traffic: the fused pass reads X exactly once, the
+    # two-pass pipeline ~3x (assign, argsort+gather, update).
+    for n, k in FUSED_CONFIGS:
+        by_two = C.lloyd_bytes_two_pass(n, k, D)
+        by_fused = C.lloyd_bytes_fused(n, k, D)
+        t_two = (C.modeled_time_s(C.assign_flops(n, k, D),
+                                  C.assign_bytes_flash(n, k, D))
+                 + C.modeled_time_s(C.update_flops_sort_inverse(n, k, D),
+                                    C.update_bytes_sort_inverse(n, k, D)))
+        t_fused = C.modeled_time_s(C.lloyd_flops_fused(n, k, D), by_fused)
+        impl = choose_step_impl(n, k, D)
+        out.append(C.fmt_row(
+            f"lloyd_two_pass_N{n}_K{k}", t_two * 1e6,
+            f"modeled_hbm_bytes={by_two:.3g};modeled_tpu"))
+        out.append(C.fmt_row(
+            f"lloyd_fused_N{n}_K{k}", t_fused * 1e6,
+            f"modeled_hbm_bytes={by_fused:.3g};"
+            f"io_reduction={by_two/by_fused:.2f}x;heuristic={impl}"))
+
+    # interpret-mode wall smoke: same dataflows, small shape (relative
+    # ordering only — both run as XLA-compiled emulations on CPU)
+    n_s, k_s, d_s = 4096, 64, 32
+    x = jax.random.normal(key, (n_s, d_s))
+    c = jax.random.normal(jax.random.fold_in(key, 4), (k_s, d_s))
+
+    @jax.jit
+    def two_pass(x_, c_):
+        a_, m_ = ops.flash_assign(x_, c_, block_n=256, block_k=64)
+        s_, n_ = ops.sort_inverse_update(x_, a_, k=k_s, block_n=256,
+                                         block_k=64)
+        return a_, s_, n_, jnp.sum(m_)
+
+    us_two = C.wall_us(two_pass, x, c, reps=5)
+    us_fused = C.wall_us(
+        jax.jit(lambda x_, c_: ops.flash_lloyd_step(
+            x_, c_, block_n=256, block_k=64)), x, c, reps=5)
+    out.append(C.fmt_row("lloyd_two_pass_interpret_smoke", us_two,
+                         f"N={n_s},K={k_s},d={d_s};cpu_interpret"))
+    out.append(C.fmt_row("lloyd_fused_interpret_smoke", us_fused,
+                         f"wall_ratio_two_pass/fused={us_two/us_fused:.2f}x"))
+
     # kernel correctness spot-check rides along (interpret mode)
     x = jax.random.normal(key, (4096, 64))
     c = jax.random.normal(jax.random.fold_in(key, 3), (256, 64))
@@ -79,6 +126,12 @@ def rows() -> list[str]:
     mism = int(jnp.sum(a != a_ref))
     out.append(C.fmt_row("flash_assign_correctness", 0.0,
                          f"mismatches={mism}/4096"))
+    af, sf, cf, jf = ops.flash_lloyd_step(x, c)
+    sr, cr = ref.update_dense_onehot_ref(x, af, 256)
+    out.append(C.fmt_row(
+        "flash_lloyd_correctness", 0.0,
+        f"a_mismatches={int(jnp.sum(af != a_ref))}/4096;"
+        f"stats_maxerr={float(jnp.max(jnp.abs(sf - sr))):.2g}"))
     return out
 
 

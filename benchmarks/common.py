@@ -16,7 +16,12 @@ import time
 import jax
 import numpy as np
 
-from repro.core.heuristics import TPU_V5E
+from repro.core.heuristics import (TPU_V5E, assign_bytes_flash,
+                                   lloyd_bytes_fused,
+                                   update_bytes_sort_inverse)
+
+__all__ = ["assign_bytes_flash", "lloyd_bytes_fused",
+           "update_bytes_sort_inverse"]  # shared with the runtime heuristic
 
 PEAK = TPU_V5E.flops_bf16
 BW = TPU_V5E.hbm_bw
@@ -51,12 +56,6 @@ def assign_bytes_materialized(n, k, d, b=4):
     return io_inputs + io_matrix + io_out
 
 
-def assign_bytes_flash(n, k, d, b=4):
-    """FlashAssign: stream X once, C once (per point-tile reuse in VMEM),
-    write assignments + min-dists."""
-    return (n * d + k * d) * b + 2 * n * 4
-
-
 def update_flops_scatter(n, k, d):
     return n * d  # adds only
 
@@ -75,13 +74,20 @@ def update_bytes_scatter(n, k, d, b=4, contention_factor=16.0):
     return n * d * b + contention_factor * n * d * 4
 
 
-def update_bytes_sort_inverse(n, k, d, b=4):
-    """argsort keys (2x4B ops on N) + one row-gather pass (read+write X)
-    + streamed kernel read + (K,d) output merges."""
-    sort_io = 4 * n * 4
-    gather_io = 2 * n * d * b
-    kernel_io = n * d * b + k * d * 4 + k * 4
-    return sort_io + gather_io + kernel_io
+def lloyd_flops_fused(n, k, d):
+    """FlashLloyd: assignment matmul + dense one-hot statistics matmul.
+
+    The fused statistics sweep is FLOP-dense over K (no sorting to make it
+    block-sparse), so the kernel trades 2NKd extra MXU FLOPs for the
+    removal of every extra HBM pass — the right trade while K·d keeps the
+    accumulator VMEM-resident (see DESIGN.md)."""
+    return assign_flops(n, k, d) + update_flops_dense(n, k, d)
+
+
+def lloyd_bytes_two_pass(n, k, d, b=4):
+    """assign (X+C streamed, a+m written) + argsort/gather/kernel of the
+    sort-inverse update: ~3 HBM passes over X per iteration."""
+    return assign_bytes_flash(n, k, d, b) + update_bytes_sort_inverse(n, k, d, b)
 
 
 def modeled_time_s(flops, bytes_, *, fused=True):

@@ -11,11 +11,12 @@ from repro.core.chunked import ChunkedKMeans, ChunkedStats
 from repro.core.distributed import make_distributed_kmeans, shard_points
 from repro.core.heuristics import Hardware, TPU_V5E, choose_blocks
 from repro.core.init import init_centroids, kmeans_plus_plus, random_init
-from repro.core.kmeans import (KMeans, KMeansConfig, KMeansState, lloyd_step,
-                               make_kmeans_fn)
+from repro.core.kmeans import (KMeans, KMeansConfig, KMeansState, lloyd_stats,
+                               lloyd_step, make_kmeans_fn)
 
 __all__ = [
-    "KMeans", "KMeansConfig", "KMeansState", "lloyd_step", "make_kmeans_fn",
+    "KMeans", "KMeansConfig", "KMeansState", "lloyd_stats", "lloyd_step",
+    "make_kmeans_fn",
     "make_distributed_kmeans", "shard_points", "ChunkedKMeans", "ChunkedStats",
     "choose_blocks", "Hardware", "TPU_V5E", "init_centroids",
     "kmeans_plus_plus", "random_init",

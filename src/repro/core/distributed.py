@@ -38,15 +38,14 @@ Array = jax.Array
 
 
 def _local_stats(x: Array, a: Array, k: int, cfg: KMeansConfig):
+    if cfg.update_impl == "fused":
+        raise NotImplementedError(
+            "update_impl='fused' is not wired into the distributed driver "
+            "yet; use sort_inverse/scatter/dense_onehot here")
     blk = cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
-    if cfg.update_impl == "sort_inverse":
-        return ops.sort_inverse_update(
-            x, a, k=k, block_n=blk.update_block_n,
-            block_k=blk.update_block_k, interpret=cfg.interpret)
-    from repro.kernels import ref
-    if cfg.update_impl == "scatter":
-        return ref.update_scatter_ref(x, a, k)
-    return ref.update_dense_onehot_ref(x, a, k)
+    return ops.centroid_stats(
+        x, a, k=k, impl=cfg.update_impl, block_n=blk.update_block_n,
+        block_k=blk.update_block_k, interpret=cfg.interpret)
 
 
 def _local_assign(x: Array, c: Array, cfg: KMeansConfig):

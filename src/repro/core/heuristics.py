@@ -90,6 +90,91 @@ def update_footprint(bn: int, bk: int, d: int, bytes_in: int) -> int:
     return x_tiles + ids + onehot + acc + partial + cnt
 
 
+def fused_footprint(bn: int, bk: int, d: int, bytes_in: int,
+                    k_pad: int) -> int:
+    """VMEM bytes held live by one FlashLloyd grid step.
+
+    The full centroid set and the f32 ``(K_pad, d)`` sums accumulator are
+    resident across the whole grid — that ``~2·K_pad·d·4`` term is the new
+    constraint the two-pass path does not have, and the reason the fused
+    path only wins at small-to-moderate ``K·d`` (see DESIGN.md).
+    """
+    x_tiles = 2 * bn * d * bytes_in     # double-buffered point stream
+    c_res = k_pad * d * bytes_in        # resident centroid block
+    acc = k_pad * d * 4 + k_pad * 4     # resident f32 sums + counts
+    score = bn * bk * 4                 # f32 score slice (sweep 1)
+    onehot = bn * bk * bytes_in         # one-hot slice (sweep 2)
+    state = bn * (4 + 4) + bn * 4       # (m, a) carry + assignment out
+    return x_tiles + c_res + acc + score + onehot + state
+
+
+# --- per-iteration HBM traffic models -------------------------------------
+# Single source of truth: the runtime crossover below and the benchmark
+# roofline tables (benchmarks/common.py) must never disagree.
+
+def assign_bytes_flash(n: int, k: int, d: int, b: int = 4) -> float:
+    """FlashAssign: stream X once, C once (per point-tile reuse in VMEM),
+    write assignments + min-dists."""
+    return (n * d + k * d) * b + 2 * n * 4
+
+
+def update_bytes_sort_inverse(n: int, k: int, d: int, b: int = 4) -> float:
+    """argsort keys (2x4B ops on N) + one row-gather pass (read+write X)
+    + streamed kernel read + (K,d) output merges."""
+    sort_io = 4 * n * 4
+    gather_io = 2 * n * d * b
+    kernel_io = n * d * b + k * d * 4 + k * 4
+    return sort_io + gather_io + kernel_io
+
+
+def lloyd_bytes_fused(n: int, k: int, d: int, b: int = 4) -> float:
+    """FlashLloyd per-iteration HBM traffic: stream X once, C once, write
+    assignments + the (K,d)/(K,) statistics. No argsort, no x_sorted
+    gather, no second pass over X."""
+    return (n * d + k * d) * b + n * 4 + k * d * 4 + k * 4
+
+
+def choose_step_impl(n: int, k: int, d: int, *, dtype_bytes: int = 4,
+                     hw: Hardware = TPU_V5E,
+                     blk: BlockConfig | None = None) -> str:
+    """Fused-vs-two-pass crossover rule (DESIGN.md).
+
+    ``"fused"`` requires both legs of the crossover:
+
+    1. *feasibility* — the FlashLloyd working set, dominated by the
+       ``K_pad·d·4`` f32 accumulator plus the resident centroid block,
+       fits the VMEM budget at the heuristic's block shapes (the two-pass
+       path only ever holds one ``B_K·d`` output block, so it scales to
+       arbitrary ``K·d``);
+    2. *roofline win* — the fused statistics sweep is FLOP-dense
+       (``2NKd`` extra MXU work vs the sort-inverse block-sparse matmul),
+       so at large ``K`` it turns compute-bound before the accumulator
+       even stops fitting. Fuse only while the single-kernel roofline
+       time beats the summed two-pass stages.
+
+    ``blk`` overrides the heuristic's block shapes — pass the caller's
+    explicit ``BlockConfig`` so feasibility is judged for the tiles that
+    will actually be launched.
+    """
+    budget = int(hw.vmem_bytes * _VMEM_FRACTION)
+    if blk is None:
+        blk = choose_blocks(n, k, d, dtype_bytes=dtype_bytes, hw=hw)
+    k_pad = _round_up(k, blk.fused_block_k)
+    if fused_footprint(blk.fused_block_n, blk.fused_block_k, d,
+                       dtype_bytes, k_pad) > budget:
+        return "two_pass"
+    peak, bw = hw.flops_bf16, hw.hbm_bw
+    # fused: one kernel, one Nd stream, assignment + dense one-hot FLOPs
+    t_fused = max(4.0 * n * k * d / peak,
+                  lloyd_bytes_fused(n, k, d, dtype_bytes) / bw)
+    # two-pass: assign and update serialize on the HBM round trip
+    t_assign = max(2.0 * n * k * d / peak,
+                   assign_bytes_flash(n, k, d, dtype_bytes) / bw)
+    t_update = max(2.0 * n * blk.update_block_k * d / peak,
+                   update_bytes_sort_inverse(n, k, d, dtype_bytes) / bw)
+    return "fused" if t_fused <= t_assign + t_update else "two_pass"
+
+
 def choose_blocks(n: int, k: int, d: int, *, dtype_bytes: int = 4,
                   hw: Hardware = TPU_V5E) -> BlockConfig:
     """Closed-form block selection — zero search, O(#candidates) arithmetic."""
@@ -124,5 +209,25 @@ def choose_blocks(n: int, k: int, d: int, *, dtype_bytes: int = 4,
     while update_footprint(u_bn, u_bk, d, dtype_bytes) > budget and u_bn > hw.sublane:
         u_bn //= 2
 
+    # --- FlashLloyd (fused): the resident K_pad·d accumulator + centroid
+    # block are fixed costs; B_K only sizes the sweep slices, so keep it
+    # modest and give the point tile whatever budget remains.
+    f_bk = _fit_minor(256, k, hw.lane)
+    f_bn = hw.sublane
+    k_pad = _round_up(k, f_bk)
+    for bn in _CANDIDATE_TILES:
+        if bn > _round_up(n, hw.sublane):
+            break
+        if fused_footprint(bn, f_bk, d, dtype_bytes, k_pad) <= budget:
+            f_bn = bn
+    while (fused_footprint(f_bn, f_bk, d, dtype_bytes, k_pad) > budget
+           and f_bk > hw.lane):
+        f_bk //= 2
+        k_pad = _round_up(k, f_bk)
+    while (fused_footprint(f_bn, f_bk, d, dtype_bytes, k_pad) > budget
+           and f_bn > hw.sublane):
+        f_bn //= 2
+
     return BlockConfig(assign_block_n=a_bn, assign_block_k=a_bk,
-                       update_block_n=u_bn, update_block_k=u_bk)
+                       update_block_n=u_bn, update_block_k=u_bk,
+                       fused_block_n=f_bn, fused_block_k=f_bk)

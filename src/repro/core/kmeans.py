@@ -33,7 +33,8 @@ class KMeansConfig:
     tol: float = 0.0                  # centroid-shift^2 tolerance (0 = run all iters)
     init: str = "random"              # random | kmeans++
     assign_impl: str = "flash"        # flash | ref
-    update_impl: str = "sort_inverse" # sort_inverse | scatter | dense_onehot
+    update_impl: str = "sort_inverse" # sort_inverse | scatter | dense_onehot | fused
+    step_impl: str = "auto"           # auto | fused | two_pass
     block: BlockConfig | None = None  # None -> cache-aware heuristic
     interpret: bool | None = None     # None -> auto (CPU interpret, TPU compiled)
     dtype: jnp.dtype | None = None    # compute dtype override for x/c
@@ -42,6 +43,44 @@ class KMeansConfig:
         if self.block is not None:
             return self.block
         return heuristics.choose_blocks(n, self.k, d, dtype_bytes=dtype_bytes)
+
+    def resolved_step_impl(self, n: int, d: int, dtype_bytes: int,
+                           blk: BlockConfig | None = None) -> str:
+        """'fused' (single FlashLloyd pass) or 'two_pass' (assign+update).
+
+        ``step_impl="auto"`` applies the VMEM + roofline crossover rule of
+        ``heuristics.choose_step_impl``, judged at the block shapes that
+        will actually be launched (``blk`` if given, else ``self.block``,
+        else the heuristic's own) — but only on the flash + sort_inverse
+        fast path;
+        explicitly requested reference impls are honoured so baselines
+        stay comparable. ``update_impl="fused"`` is an alias for
+        ``step_impl="fused"``; either spelling combined with
+        ``step_impl="two_pass"``, a non-flash ``assign_impl``, or a
+        reference ``update_impl`` is contradictory and raises.
+        """
+        if self.update_impl == "fused" or self.step_impl == "fused":
+            if self.step_impl == "two_pass":
+                raise ValueError(
+                    "update_impl='fused' contradicts step_impl='two_pass'")
+            if self.assign_impl != "flash":
+                raise ValueError(
+                    "the fused step subsumes the assignment; it cannot "
+                    f"be combined with assign_impl={self.assign_impl!r}")
+            if self.update_impl not in ("fused", "sort_inverse"):
+                raise ValueError(
+                    "step_impl='fused' contradicts "
+                    f"update_impl={self.update_impl!r}")
+            return "fused"
+        if self.step_impl == "two_pass":
+            return "two_pass"
+        if self.step_impl != "auto":
+            raise ValueError(f"unknown step impl {self.step_impl!r}")
+        if self.assign_impl != "flash" or self.update_impl != "sort_inverse":
+            return "two_pass"
+        return heuristics.choose_step_impl(
+            n, self.k, d, dtype_bytes=dtype_bytes,
+            blk=blk if blk is not None else self.block)
 
 
 class KMeansState(NamedTuple):
@@ -63,23 +102,37 @@ def _assign(x: Array, c: Array, cfg: KMeansConfig, blk: BlockConfig
     raise ValueError(f"unknown assign impl {cfg.assign_impl!r}")
 
 
-def _update(x: Array, a: Array, c_prev: Array, cfg: KMeansConfig,
-            blk: BlockConfig) -> Array:
-    return ops.centroid_update(
-        x, a, c_prev, impl=cfg.update_impl,
-        block_n=blk.update_block_n, block_k=blk.update_block_k,
-        interpret=cfg.interpret)
+def lloyd_stats(x: Array, c: Array, cfg: KMeansConfig,
+                blk: BlockConfig | None = None
+                ) -> tuple[Array, Array, Array, Array]:
+    """One iteration's sufficient statistics: (a, sums, counts, inertia).
+
+    Dispatches between the fused single-pass FlashLloyd kernel (one HBM
+    stream of ``x``) and the two-pass assign + update pipeline according
+    to ``cfg.resolved_step_impl`` — identical math either way, only the
+    dataflow differs. Shared by ``lloyd_step`` and the chunked driver.
+    """
+    if blk is None:
+        blk = cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
+    impl = cfg.resolved_step_impl(x.shape[0], x.shape[1], x.dtype.itemsize,
+                                  blk=blk)
+    if impl == "fused":
+        return ops.flash_lloyd_step(
+            x, c, block_n=blk.fused_block_n, block_k=blk.fused_block_k,
+            interpret=cfg.interpret)
+    a, m = _assign(x, c, cfg, blk)
+    s, cnt = ops.centroid_stats(
+        x, a, k=cfg.k, impl=cfg.update_impl, block_n=blk.update_block_n,
+        block_k=blk.update_block_k, interpret=cfg.interpret)
+    return a, s, cnt, jnp.sum(m)
 
 
 def lloyd_step(x: Array, c: Array, cfg: KMeansConfig,
                blk: BlockConfig | None = None
                ) -> tuple[Array, Array, Array]:
     """One exact Lloyd iteration. Returns (c_new, assignments, inertia)."""
-    if blk is None:
-        blk = cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
-    a, m = _assign(x, c, cfg, blk)
-    c_new = _update(x, a, c, cfg, blk)
-    return c_new, a, jnp.sum(m)
+    a, s, cnt, inertia = lloyd_stats(x, c, cfg, blk)
+    return ops.finalize_centroids(s, cnt, c), a, inertia
 
 
 def make_kmeans_fn(cfg: KMeansConfig):

@@ -1,0 +1,158 @@
+"""FlashLloyd — fused assignment + centroid statistics (Pallas TPU).
+
+One Lloyd iteration's sufficient statistics in a single IO-optimal pass.
+The two-pass pipeline (FlashAssign, then sort-inverse update) streams the
+point set from HBM three times per iteration: the assignment kernel reads
+``x``, the ``argsort``/row-gather prologue reads and rewrites it as
+``x_sorted``, and the update kernel reads ``x_sorted`` again. FlashLloyd
+exploits that once a point tile's argmin is known the tile is *already
+resident in VMEM* — its contribution ``onehot^T @ x_tile`` to the centroid
+sums can be accumulated immediately, so the whole iteration needs exactly
+one ``O(N d)`` read (see DESIGN.md for the traffic model of all three
+dataflows).
+
+Structure: grid ``(N_tiles,)`` with an inner ``fori_loop`` K-sweep.
+
+- sweep 1 replays the FlashAssign online argmin over ``K_pad/B_K``
+  centroid slices of the VMEM-resident centroid block (the ``||x||^2``
+  term is dropped on-chip, re-added for the inertia only);
+- sweep 2 revisits the same centroid slices, builds the tile-local one-hot
+  ``(B_N, B_K)`` in registers, and accumulates one MXU matmul
+  ``onehot^T @ x_tile`` plus counts into the ``(K_pad, d)`` / ``(K_pad,)``
+  f32 output blocks, which stay resident in VMEM for the whole grid
+  (constant index map — initialized at tile 0, flushed once at the end).
+
+The price is that the full centroid set and the f32 accumulators must be
+VMEM-resident: ``~2 K_pad·d·4`` bytes. ``core.heuristics.fused_footprint``
+models this and auto-falls back to the two-pass path when it exceeds the
+VMEM budget — which is why both dataflows survive (sort-inverse remains
+the large-K path).
+
+Shape padding is done by ``ops.flash_lloyd_step``; padded centroids are
+masked with ``+inf`` scores (can never win), padded points are masked out
+of the one-hot, the counts, and the inertia via ``n_actual``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_INF = float("inf")
+
+
+def _flash_lloyd_kernel(x_ref, c_ref, a_ref, s_ref, cnt_ref, j_ref, *,
+                        block_n: int, block_k: int, k_actual: int,
+                        n_actual: int):
+    """One point-tile grid step: argmin K-sweep, then accumulate K-sweep."""
+    i = pl.program_id(0)
+    nk = c_ref.shape[0] // block_k
+
+    @pl.when(i == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref[...])
+        cnt_ref[...] = jnp.zeros_like(cnt_ref[...])
+        j_ref[...] = jnp.zeros_like(j_ref[...])
+
+    x = x_ref[...]                                    # (bn, d), resident
+    # rank-2 iota: Mosaic rejects 1-D iota (same idiom as flash_assign)
+    row_ids = i * block_n + jax.lax.broadcasted_iota(
+        jnp.int32, (block_n, 1), 0)
+    row_valid = row_ids < n_actual                    # (bn, 1)
+
+    # ---- sweep 1: online argmin over centroid slices (FlashAssign math).
+    def _argmin_body(kt, carry):
+        m, a = carry
+        c = c_ref[pl.ds(kt * block_k, block_k), :]   # (bk, d)
+        cross = jax.lax.dot_general(
+            x, c, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        csq = jnp.sum(c.astype(jnp.float32) * c.astype(jnp.float32), axis=-1)
+        score = csq[None, :] - 2.0 * cross            # (bn, bk) f32
+        k_ids = kt * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, score.shape, 1)
+        score = jnp.where(k_ids < k_actual, score, _INF)
+        local_m = jnp.min(score, axis=1)
+        local_a = (kt * block_k
+                   + jnp.argmin(score, axis=1).astype(jnp.int32))
+        # strict '<' keeps the earliest index on exact ties (argmin parity)
+        better = local_m < m
+        return jnp.where(better, local_m, m), jnp.where(better, local_a, a)
+
+    m, a = jax.lax.fori_loop(
+        0, nk, _argmin_body,
+        (jnp.full((block_n,), _INF, jnp.float32),
+         jnp.zeros((block_n,), jnp.int32)))
+    a_ref[...] = a
+
+    # Inertia: re-add the dropped ||x||^2, clamp fp residue, mask padding.
+    x32 = x.astype(jnp.float32)
+    xsq = jnp.sum(x32 * x32, axis=-1)
+    dist = jnp.maximum(m + xsq, 0.0)[:, None]         # (bn, 1)
+    j_ref[0, 0] += jnp.sum(jnp.where(row_valid, dist, 0.0))
+
+    # ---- sweep 2: one-hot statistics into the resident accumulators.
+    def _accum_body(kt, _):
+        rel = a - kt * block_k                        # (bn,)
+        cols = jax.lax.broadcasted_iota(
+            jnp.int32, (block_n, block_k), 1)
+        onehot = jnp.logical_and(rel[:, None] == cols, row_valid)
+        oh = onehot.astype(x.dtype)
+        # MXU: (bk, bn) @ (bn, d) f32-accumulated == slice-local sums.
+        partial = jax.lax.dot_general(
+            oh, x, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        sl = pl.ds(kt * block_k, block_k)
+        s_ref[sl, :] += partial
+        cnt_ref[sl] += jnp.sum(onehot.astype(jnp.float32), axis=0)
+        return 0
+
+    jax.lax.fori_loop(0, nk, _accum_body, 0)
+
+
+def flash_lloyd_raw(x: Array, c: Array, *, block_n: int, block_k: int,
+                    k_actual: int, n_actual: int, interpret: bool = False
+                    ) -> tuple[Array, Array, Array, Array]:
+    """Pallas call on pre-padded inputs.
+
+    x: (N_pad, d), c: (K_pad, d) with N_pad % block_n == K_pad % block_k == 0.
+    Returns ``(assignments int32 (N_pad,), sums f32 (K_pad, d),
+    counts f32 (K_pad,), inertia f32 (1, 1))``; padded rows/centroids
+    contribute nothing to the statistics.
+    """
+    n_pad, d = x.shape
+    k_pad = c.shape[0]
+    grid = (n_pad // block_n,)
+
+    kernel = functools.partial(
+        _flash_lloyd_kernel, block_n=block_n, block_k=block_k,
+        k_actual=k_actual, n_actual=n_actual)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((k_pad, d), lambda i: (0, 0)),   # resident
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((k_pad, d), lambda i: (0, 0)),   # resident acc
+            pl.BlockSpec((k_pad,), lambda i: (0,)),
+            # scalar inertia accumulator lives in SMEM (Mosaic idiom)
+            pl.BlockSpec((1, 1), lambda i: (0, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad,), jnp.int32),
+            jax.ShapeDtypeStruct((k_pad, d), jnp.float32),
+            jax.ShapeDtypeStruct((k_pad,), jnp.float32),
+            jax.ShapeDtypeStruct((1, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, c)

@@ -16,6 +16,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_assign as _fa
+from repro.kernels import flash_lloyd as _fl
 from repro.kernels import ref as _ref
 from repro.kernels import sort_inverse_update as _siu
 
@@ -24,11 +25,13 @@ Array = jax.Array
 
 @dataclasses.dataclass(frozen=True)
 class BlockConfig:
-    """Tile shapes for the two kernels (see core.heuristics for selection)."""
+    """Tile shapes for the kernels (see core.heuristics for selection)."""
     assign_block_n: int = 256
     assign_block_k: int = 256
     update_block_n: int = 512
     update_block_k: int = 256
+    fused_block_n: int = 256
+    fused_block_k: int = 256
 
     def validate(self) -> "BlockConfig":
         for f in dataclasses.fields(self):
@@ -146,6 +149,38 @@ def sort_inverse_update(x: Array, a: Array, *, k: int, block_n: int = 512,
 
 
 # ---------------------------------------------------------------------------
+# FlashLloyd — fused assignment + statistics in one pass
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_k",
+                                             "interpret"))
+def flash_lloyd_step(x: Array, c: Array, *, block_n: int = 256,
+                     block_k: int = 256, interpret: bool | None = None
+                     ) -> tuple[Array, Array, Array, Array]:
+    """Fused Lloyd statistics. x: (N, d), c: (K, d).
+
+    Returns ``(assignments int32 (N,), sums f32 (K, d), counts f32 (K,),
+    inertia f32 ())`` in a single pass over ``x`` — no argsort, no
+    ``x_sorted`` gather, no second HBM stream. The ``(K_pad, d)`` f32
+    accumulator must be VMEM-resident; callers should consult
+    ``core.heuristics.choose_step_impl`` (falls back to the two-pass
+    assign + sort-inverse pipeline when it does not fit).
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, d = x.shape
+    k = c.shape[0]
+    block_n = min(block_n, _round_up(n, 8))
+    block_k = min(block_k, _round_up(k, 8))
+    xp = _pad_to(x, block_n, 0, 0)
+    cp = _pad_to(c, block_k, 0, 0)
+    a, s, cnt, j = _fl.flash_lloyd_raw(
+        xp, cp, block_n=block_n, block_k=block_k, k_actual=k, n_actual=n,
+        interpret=interpret)
+    return a[:n], s[:k], cnt[:k], j[0, 0]
+
+
+# ---------------------------------------------------------------------------
 # Batched variants + centroid update convenience
 # ---------------------------------------------------------------------------
 
@@ -159,21 +194,34 @@ def sort_inverse_update_batched(x: Array, a: Array, *, k: int, **kw
     return jax.vmap(lambda xb, ab: sort_inverse_update(xb, ab, k=k, **kw))(x, a)
 
 
+def centroid_stats(x: Array, a: Array, *, k: int, impl: str = "sort_inverse",
+                   block_n: int = 512, block_k: int = 256,
+                   interpret: bool | None = None) -> tuple[Array, Array]:
+    """Centroid sufficient statistics ``(sums f32 (K, d), counts f32 (K,))``
+    by any of the two-pass update dataflows."""
+    if impl == "sort_inverse":
+        return sort_inverse_update(x, a, k=k, block_n=block_n,
+                                   block_k=block_k, interpret=interpret)
+    if impl == "scatter":
+        return _ref.update_scatter_ref(x, a, k)
+    if impl == "dense_onehot":
+        return _ref.update_dense_onehot_ref(x, a, k)
+    raise ValueError(f"unknown update impl {impl!r}")
+
+
+def finalize_centroids(s: Array, cnt: Array, c_prev: Array) -> Array:
+    """sums/counts -> centroids with empty-cluster fallback (keep old)."""
+    new_c = s / jnp.maximum(cnt, 1.0)[:, None]
+    return jnp.where((cnt > 0)[:, None], new_c,
+                     c_prev.astype(jnp.float32)).astype(c_prev.dtype)
+
+
 def centroid_update(x: Array, a: Array, c_prev: Array, *,
                     impl: str = "sort_inverse", block_n: int = 512,
                     block_k: int = 256, interpret: bool | None = None
                     ) -> Array:
     """Full update stage with empty-cluster fallback (keeps old centroid)."""
-    k = c_prev.shape[0]
-    if impl == "sort_inverse":
-        s, cnt = sort_inverse_update(x, a, k=k, block_n=block_n,
-                                     block_k=block_k, interpret=interpret)
-    elif impl == "scatter":
-        s, cnt = _ref.update_scatter_ref(x, a, k)
-    elif impl == "dense_onehot":
-        s, cnt = _ref.update_dense_onehot_ref(x, a, k)
-    else:
-        raise ValueError(f"unknown update impl {impl!r}")
-    new_c = s / jnp.maximum(cnt, 1.0)[:, None]
-    return jnp.where((cnt > 0)[:, None], new_c,
-                     c_prev.astype(jnp.float32)).astype(c_prev.dtype)
+    s, cnt = centroid_stats(x, a, k=c_prev.shape[0], impl=impl,
+                            block_n=block_n, block_k=block_k,
+                            interpret=interpret)
+    return finalize_centroids(s, cnt, c_prev)

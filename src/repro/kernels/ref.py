@@ -89,6 +89,19 @@ def update_dense_onehot_ref(x: Array, a: Array, k: int) -> tuple[Array, Array]:
     return s, cnt
 
 
+def lloyd_stats_ref(x: Array, c: Array) -> tuple[Array, Array, Array, Array]:
+    """Oracle for the fused FlashLloyd pass: standard assignment composed
+    with dense one-hot statistics.
+
+    Returns ``(assignments int32 (N,), sums f32 (K, d), counts f32 (K,),
+    inertia f32 ())`` — the exact quantities ``ops.flash_lloyd_step``
+    produces in a single kernel.
+    """
+    a, m = assign_ref(x, c)
+    s, cnt = update_dense_onehot_ref(x, a, c.shape[0])
+    return a, s, cnt, jnp.sum(m)
+
+
 def centroid_update_ref(x: Array, a: Array, c_prev: Array) -> Array:
     """Full reference centroid update with empty-cluster fallback."""
     k = c_prev.shape[0]

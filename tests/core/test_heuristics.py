@@ -1,26 +1,56 @@
 """Cache-aware compile heuristic: validity, VMEM budget, alignment."""
-import hypothesis
-import hypothesis.strategies as st
 import pytest
 
 from repro.core import heuristics as H
 
+try:  # hypothesis is optional: deterministic tests below run without it
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # pragma: no cover - CI installs requirements-dev.txt
+    hypothesis = st = None
 
-@hypothesis.settings(max_examples=60, deadline=None)
-@hypothesis.given(
-    n=st.integers(8, 10_000_000), k=st.integers(1, 200_000),
-    d=st.integers(1, 8192), bytes_=st.sampled_from([2, 4]))
-def test_property_budget_and_alignment(n, k, d, bytes_):
-    blk = H.choose_blocks(n, k, d, dtype_bytes=bytes_)
-    budget = H.TPU_V5E.vmem_bytes  # full VMEM is the hard ceiling
-    assert H.assign_footprint(blk.assign_block_n, blk.assign_block_k, d,
-                              bytes_) <= budget
-    assert H.update_footprint(blk.update_block_n, blk.update_block_k, d,
-                              bytes_) <= budget
-    for v in (blk.assign_block_n, blk.assign_block_k,
-              blk.update_block_n, blk.update_block_k):
-        assert v >= H.TPU_V5E.sublane
-        assert v % H.TPU_V5E.sublane == 0
+
+if hypothesis is not None:
+    @hypothesis.settings(max_examples=60, deadline=None)
+    @hypothesis.given(
+        n=st.integers(8, 10_000_000), k=st.integers(1, 200_000),
+        d=st.integers(1, 8192), bytes_=st.sampled_from([2, 4]))
+    def test_property_budget_and_alignment(n, k, d, bytes_):
+        blk = H.choose_blocks(n, k, d, dtype_bytes=bytes_)
+        budget = H.TPU_V5E.vmem_bytes  # full VMEM is the hard ceiling
+        assert H.assign_footprint(blk.assign_block_n, blk.assign_block_k, d,
+                                  bytes_) <= budget
+        assert H.update_footprint(blk.update_block_n, blk.update_block_k, d,
+                                  bytes_) <= budget
+        for v in (blk.assign_block_n, blk.assign_block_k,
+                  blk.update_block_n, blk.update_block_k,
+                  blk.fused_block_n, blk.fused_block_k):
+            assert v >= H.TPU_V5E.sublane
+            assert v % H.TPU_V5E.sublane == 0
+        # the fused path is only selected when its working set fits
+        if H.choose_step_impl(n, k, d, dtype_bytes=bytes_) == "fused":
+            k_pad = ((k + blk.fused_block_k - 1)
+                     // blk.fused_block_k) * blk.fused_block_k
+            assert H.fused_footprint(blk.fused_block_n, blk.fused_block_k,
+                                     d, bytes_, k_pad) <= budget
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_budget_and_alignment():
+        pass
+
+
+def test_step_impl_crossover():
+    """Fused is chosen while the K·d f32 accumulator fits VMEM; the
+    heuristic auto-falls back to the two-pass path beyond that."""
+    # 1024 x 128 f32 accumulator + centroids ~= 1 MB -> comfortably fused
+    assert H.choose_step_impl(1_000_000, 1024, 128) == "fused"
+    # 65536 x 512 f32 accumulator ~= 128 MB >> 16 MB VMEM -> two-pass
+    assert H.choose_step_impl(1_000_000, 65536, 512) == "two_pass"
+    # crossing the budget by growing K alone flips the decision
+    impls = [H.choose_step_impl(100_000, k, 256) for k in
+             (256, 1024, 4096, 16384, 65536)]
+    assert impls[0] == "fused" and impls[-1] == "two_pass"
+    assert impls == sorted(impls)  # "fused" < "two_pass": monotone in K
 
 
 def test_large_d_shrinks_blocks():

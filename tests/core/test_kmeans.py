@@ -1,10 +1,14 @@
 """Lloyd-loop invariants and end-to-end clustering quality."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:  # hypothesis is optional: deterministic tests below run without it
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # pragma: no cover - CI installs requirements-dev.txt
+    hypothesis = st = None
 
 from repro.core import (KMeans, KMeansConfig, init_centroids, lloyd_step)
 
@@ -93,14 +97,19 @@ def test_empty_cluster_keeps_centroid(key):
     np.testing.assert_allclose(np.asarray(c1[3]), 100.0)
 
 
-@hypothesis.settings(max_examples=10, deadline=None)
-@hypothesis.given(n=st.integers(20, 300), k=st.integers(2, 12),
-                  seed=st.integers(0, 99))
-def test_property_assignment_partition(n, k, seed):
-    """Every point assigned to exactly one in-range cluster."""
-    x = jax.random.normal(jax.random.PRNGKey(seed), (n, 6))
-    km = KMeans(KMeansConfig(k=k, max_iters=3))
-    st_ = km.fit(jax.random.PRNGKey(seed + 1), x)
-    a = np.asarray(st_.assignments)
-    assert a.shape == (n,)
-    assert a.min() >= 0 and a.max() < k
+if hypothesis is not None:
+    @hypothesis.settings(max_examples=10, deadline=None)
+    @hypothesis.given(n=st.integers(20, 300), k=st.integers(2, 12),
+                      seed=st.integers(0, 99))
+    def test_property_assignment_partition(n, k, seed):
+        """Every point assigned to exactly one in-range cluster."""
+        x = jax.random.normal(jax.random.PRNGKey(seed), (n, 6))
+        km = KMeans(KMeansConfig(k=k, max_iters=3))
+        st_ = km.fit(jax.random.PRNGKey(seed + 1), x)
+        a = np.asarray(st_.assignments)
+        assert a.shape == (n,)
+        assert a.min() >= 0 and a.max() < k
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_assignment_partition():
+        pass

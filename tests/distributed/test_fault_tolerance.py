@@ -15,6 +15,8 @@ from repro.optim import adamw
 from repro.train.train_step import make_train_step
 from repro.train.trainer import Trainer, TrainerConfig
 
+pytestmark = pytest.mark.slow  # trains real steps + subprocess replay
+
 
 def _mk(tmp_path, total=12, ckpt_every=4, fault_hook=None):
     cfg = get_config("llama3-8b").reduced()

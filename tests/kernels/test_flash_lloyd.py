@@ -1,0 +1,194 @@
+"""FlashLloyd fused kernel vs composed references: assignments, sufficient
+statistics, inertia, ragged shapes, empty clusters, bf16, and fused-vs-two-
+pass Lloyd-trajectory equivalence (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import KMeansConfig, init_centroids, lloyd_step, make_kmeans_fn
+from repro.kernels import ops, ref
+from tests.conftest import assert_assignments_match
+
+try:  # hypothesis is optional: deterministic tests below run without it
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # pragma: no cover - CI installs requirements-dev.txt
+    hypothesis = st = None
+
+
+def _data(n, k, d, dtype=jnp.float32, seed=0):
+    kx, kc = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (n, d), dtype)
+    c = jax.random.normal(kc, (k, d), dtype)
+    return x, c
+
+
+def _check(x, c, block_n, block_k, tol=1e-4):
+    """Fused outputs vs assign_ref + dense-one-hot oracle on fused's own
+    assignments (sidesteps numerical near-tie index divergence)."""
+    a, s, cnt, j = ops.flash_lloyd_step(x, c, block_n=block_n,
+                                        block_k=block_k)
+    a_ref, m_ref = ref.assign_ref(x, c)
+    assert_assignments_match(x.astype(jnp.float32), c.astype(jnp.float32),
+                             a, a_ref, tol=max(tol, 1e-3))
+    s_ref, cnt_ref = ref.update_dense_onehot_ref(x, a, c.shape[0])
+    assert np.array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=tol, atol=tol)
+    return a, s, cnt, j
+
+
+# ragged N/K (non-multiples of any block), tiny and padded-heavy shapes
+SHAPES = [
+    (16, 4, 2), (100, 7, 3), (256, 64, 32), (1000, 37, 19),
+    (513, 100, 33), (2048, 512, 64), (333, 17, 257),
+]
+
+
+@pytest.mark.parametrize("n,k,d", SHAPES)
+def test_sweep_f32(n, k, d):
+    x, c = _data(n, k, d)
+    a, s, cnt, j = _check(x, c, block_n=128, block_k=64)
+    _, m_ref = ref.assign_ref(x, c)
+    np.testing.assert_allclose(float(j), float(jnp.sum(m_ref)),
+                               rtol=1e-4)
+    # mass conservation: every real point counted exactly once
+    np.testing.assert_allclose(np.asarray(cnt).sum(), n)
+    np.testing.assert_allclose(np.asarray(s).sum(0), np.asarray(x.sum(0)),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("n,k,d", [(256, 64, 32), (100, 7, 3)])
+def test_sweep_bf16(n, k, d):
+    x, c = _data(n, k, d, jnp.bfloat16)
+    a, s, cnt, j = ops.flash_lloyd_step(x, c, block_n=64, block_k=32)
+    # counts are integral regardless of input dtype
+    assert np.asarray(cnt).sum() == n
+    # statistics accumulate in f32: compare against the f32 oracle on the
+    # fused assignments with bf16-input tolerance
+    s_ref, cnt_ref = ref.update_dense_onehot_ref(x, a, k)
+    assert np.array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_block_shape_invariance():
+    x, c = _data(300, 50, 16)
+    outs = [ops.flash_lloyd_step(x, c, block_n=bn, block_k=bk)
+            for bn, bk in [(8, 8), (128, 128), (256, 64)]]
+    a0, s0, c0, j0 = outs[0]
+    for a1, s1, c1, j1 in outs[1:]:
+        assert_assignments_match(x, c, a1, a0)
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                                   rtol=1e-5, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(c0), np.asarray(c1))
+        np.testing.assert_allclose(float(j0), float(j1), rtol=1e-5)
+
+
+def test_empty_clusters():
+    """A far-away centroid attracts no points: zero count, zero sum row."""
+    x, _ = _data(200, 1, 5)
+    c = jnp.concatenate([x[:7], jnp.full((1, 5), 100.0)])
+    a, s, cnt, _ = ops.flash_lloyd_step(x, c, block_n=64, block_k=8)
+    assert not bool(jnp.any(a == 7))
+    assert float(cnt[7]) == 0.0
+    assert np.all(np.asarray(s)[7] == 0.0)
+
+
+def test_matches_two_pass_step():
+    """One fused lloyd_step == one two-pass lloyd_step (same blocks math)."""
+    x, _ = _data(700, 1, 24, seed=3)
+    c0 = init_centroids(jax.random.PRNGKey(1), x, 40, "random")
+    cfg_f = KMeansConfig(k=40, step_impl="fused")
+    cfg_t = KMeansConfig(k=40, step_impl="two_pass")
+    cf, af, jf = lloyd_step(x, c0, cfg_f)
+    ct, at, jt = lloyd_step(x, c0, cfg_t)
+    assert_assignments_match(x, c0, af, at)
+    np.testing.assert_allclose(np.asarray(cf), np.asarray(ct),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(jf), float(jt), rtol=1e-5)
+
+
+def test_update_impl_fused_alias():
+    """update_impl="fused" routes to the same fused kernel as step_impl."""
+    x, _ = _data(300, 1, 8, seed=5)
+    c0 = init_centroids(jax.random.PRNGKey(2), x, 12, "random")
+    c_a, a_a, j_a = lloyd_step(x, c0, KMeansConfig(k=12, update_impl="fused"))
+    c_b, a_b, j_b = lloyd_step(x, c0, KMeansConfig(k=12, step_impl="fused"))
+    np.testing.assert_allclose(np.asarray(c_a), np.asarray(c_b))
+    assert np.array_equal(np.asarray(a_a), np.asarray(a_b))
+
+
+def test_contradictory_config_raises():
+    cfg = KMeansConfig(k=4, update_impl="fused", step_impl="two_pass")
+    with pytest.raises(ValueError, match="contradicts"):
+        cfg.resolved_step_impl(100, 8, 4)
+    cfg = KMeansConfig(k=4, update_impl="fused", assign_impl="ref")
+    with pytest.raises(ValueError, match="assign_impl"):
+        cfg.resolved_step_impl(100, 8, 4)
+    cfg = KMeansConfig(k=4, step_impl="fused", assign_impl="ref")
+    with pytest.raises(ValueError, match="assign_impl"):
+        cfg.resolved_step_impl(100, 8, 4)
+    cfg = KMeansConfig(k=4, step_impl="fused", update_impl="scatter")
+    with pytest.raises(ValueError, match="update_impl"):
+        cfg.resolved_step_impl(100, 8, 4)
+    with pytest.raises(ValueError, match="step impl"):
+        KMeansConfig(k=4, step_impl="nope").resolved_step_impl(100, 8, 4)
+
+
+def test_fit_trajectory_equivalence():
+    """Full fused fit == full two-pass fit in f32 (identical trajectories)."""
+    kc, kx = jax.random.split(jax.random.PRNGKey(9))
+    centers = jax.random.normal(kc, (6, 10)) * 6.0
+    x = (centers[jax.random.randint(kx, (900,), 0, 6)]
+         + jax.random.normal(jax.random.fold_in(kx, 1), (900, 10)) * 0.3)
+    key = jax.random.PRNGKey(11)
+    st_f = make_kmeans_fn(
+        KMeansConfig(k=6, max_iters=8, step_impl="fused"))(key, x)
+    st_t = make_kmeans_fn(
+        KMeansConfig(k=6, max_iters=8, step_impl="two_pass"))(key, x)
+    assert int(st_f.iteration) == int(st_t.iteration)
+    assert np.array_equal(np.asarray(st_f.assignments),
+                          np.asarray(st_t.assignments))
+    np.testing.assert_allclose(np.asarray(st_f.centroids),
+                               np.asarray(st_t.centroids),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(st_f.inertia), float(st_t.inertia),
+                               rtol=1e-5)
+
+
+def test_chunked_fused_equals_monolithic():
+    """The out-of-core driver on the fused path reproduces the monolithic
+    iteration (one HBM stream per chunk instead of three)."""
+    from repro.core import ChunkedKMeans
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (1000, 12))
+    c0 = init_centroids(jax.random.PRNGKey(1), x, 7, "random")
+    cfg = KMeansConfig(k=7, max_iters=1, step_impl="fused")
+    c_mono, _, j_mono = lloyd_step(x, c0, cfg)
+    ck = ChunkedKMeans(cfg, chunk_size=256)
+    c_chunk, j_chunk = ck.iterate(np.asarray(x), c0)
+    np.testing.assert_allclose(np.asarray(c_mono), np.asarray(c_chunk),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(float(j_mono), float(j_chunk), rtol=1e-5)
+
+
+if hypothesis is not None:
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(n=st.integers(1, 300), k=st.integers(1, 80),
+                      d=st.integers(1, 24), seed=st.integers(0, 10_000))
+    def test_property_fused_sufficient_statistics(n, k, d, seed):
+        x, c = _data(n, k, d, seed=seed)
+        a, s, cnt, j = ops.flash_lloyd_step(x, c, block_n=32, block_k=16)
+        s_ref, cnt_ref = ref.update_scatter_ref(x, a, k)
+        assert np.array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                                   rtol=1e-4, atol=1e-4)
+        dmat = np.asarray(ref.pairwise_sq_dists(x, c))
+        np.testing.assert_allclose(float(j), float(dmat.min(axis=1).sum()),
+                                   rtol=1e-3, atol=1e-3)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_fused_sufficient_statistics():
+        pass

@@ -1,11 +1,15 @@
 """Sort-inverse update kernel vs scatter oracle: exactness of counts,
 allclose sums, degenerate distributions, hypothesis properties."""
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+try:  # hypothesis is optional: deterministic tests below run without it
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # pragma: no cover - CI installs requirements-dev.txt
+    hypothesis = st = None
 
 from repro.kernels import ops, ref
 
@@ -82,31 +86,39 @@ def test_dense_onehot_matches_scatter():
                                rtol=1e-5, atol=1e-4)
 
 
-@hypothesis.settings(max_examples=25, deadline=None)
-@hypothesis.given(n=st.integers(1, 300), k=st.integers(1, 80),
-                  d=st.integers(1, 16), seed=st.integers(0, 10_000))
-def test_property_sufficient_statistics(n, k, d, seed):
-    x, a = _data(n, k, d, seed=seed)
-    s, cnt = ops.sort_inverse_update(x, a, k=k, block_n=32, block_k=16)
-    s_ref, cnt_ref = ref.update_scatter_ref(x, a, k)
-    assert np.array_equal(np.asarray(cnt), np.asarray(cnt_ref))
-    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
-                               rtol=1e-4, atol=1e-4)
-    # mass conservation
-    np.testing.assert_allclose(np.asarray(cnt).sum(), n)
-    np.testing.assert_allclose(np.asarray(s).sum(0),
-                               np.asarray(x.sum(0)), rtol=1e-4, atol=1e-3)
+if hypothesis is not None:
+    @hypothesis.settings(max_examples=25, deadline=None)
+    @hypothesis.given(n=st.integers(1, 300), k=st.integers(1, 80),
+                      d=st.integers(1, 16), seed=st.integers(0, 10_000))
+    def test_property_sufficient_statistics(n, k, d, seed):
+        x, a = _data(n, k, d, seed=seed)
+        s, cnt = ops.sort_inverse_update(x, a, k=k, block_n=32, block_k=16)
+        s_ref, cnt_ref = ref.update_scatter_ref(x, a, k)
+        assert np.array_equal(np.asarray(cnt), np.asarray(cnt_ref))
+        np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                                   rtol=1e-4, atol=1e-4)
+        # mass conservation
+        np.testing.assert_allclose(np.asarray(cnt).sum(), n)
+        np.testing.assert_allclose(np.asarray(s).sum(0),
+                                   np.asarray(x.sum(0)), rtol=1e-4, atol=1e-3)
 
+    @hypothesis.settings(max_examples=10, deadline=None)
+    @hypothesis.given(seed=st.integers(0, 1000))
+    def test_property_permutation_invariance(seed):
+        """Shuffling the points must not change the statistics."""
+        x, a = _data(257, 13, 5, seed=seed)
+        perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), 257)
+        s0, c0 = ops.sort_inverse_update(x, a, k=13, block_n=64, block_k=16)
+        s1, c1 = ops.sort_inverse_update(x[perm], a[perm], k=13,
+                                         block_n=64, block_k=16)
+        assert np.array_equal(np.asarray(c0), np.asarray(c1))
+        np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
+                                   rtol=1e-4, atol=1e-4)
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_sufficient_statistics():
+        pass
 
-@hypothesis.settings(max_examples=10, deadline=None)
-@hypothesis.given(seed=st.integers(0, 1000))
-def test_property_permutation_invariance(seed):
-    """Shuffling the points must not change the statistics."""
-    x, a = _data(257, 13, 5, seed=seed)
-    perm = jax.random.permutation(jax.random.PRNGKey(seed + 1), 257)
-    s0, c0 = ops.sort_inverse_update(x, a, k=13, block_n=64, block_k=16)
-    s1, c1 = ops.sort_inverse_update(x[perm], a[perm], k=13,
-                                     block_n=64, block_k=16)
-    assert np.array_equal(np.asarray(c0), np.asarray(c1))
-    np.testing.assert_allclose(np.asarray(s0), np.asarray(s1),
-                               rtol=1e-4, atol=1e-4)
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_property_permutation_invariance():
+        pass

@@ -9,6 +9,8 @@ from repro.configs.base import all_configs, get_config
 from repro.models import model as M
 from repro.models.common import Ctx
 
+pytestmark = pytest.mark.slow  # full-arch sweep: minutes of CPU compile
+
 ARCHS = sorted(all_configs())
 CTX = Ctx(mesh=None, compute_dtype=jnp.float32)
 B, S = 2, 32

@@ -17,6 +17,7 @@ from repro.serve.engine import Engine, ServeConfig
 CTX = Ctx(mesh=None, compute_dtype=jnp.float32)
 
 
+@pytest.mark.slow  # ~15 s: full-model forward at serving length
 def test_decode_matches_full_forward(key):
     """logits from incremental decode == logits from full forward."""
     cfg = get_config("llama3-8b").reduced()
