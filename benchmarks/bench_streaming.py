@@ -1,0 +1,86 @@
+"""Streaming/mini-batch k-means — the paper's "online primitive" claim.
+
+Rows:
+- ``streaming_partial_fit_*``: wall time of one decayed mini-batch Lloyd
+  update (the marginal cost of staying clustered is O(batch), not
+  O(total data seen)); derived column reports the inertia ratio vs a
+  full-batch refit after one epoch of shuffled batches.
+- ``streaming_vs_refit_model``: modeled TPU cost of keeping N points
+  clustered while a stream appends R-point batches — incremental
+  partial_fit (one lloyd_stats pass over R) vs refit-from-scratch
+  (max_iters passes over N+R), the serve engine's situation.
+- ``chunked_earlystop``: iterations actually run by the tol-aware chunked
+  driver vs the fixed-iteration worst case.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import (ChunkedKMeans, KMeans, KMeansConfig,
+                        StreamingKMeans, init_centroids)
+
+
+def _blobs(key, n, k, d, spread=6.0, noise=0.3):
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * spread
+    assign = jax.random.randint(ka, (n,), 0, k)
+    return centers[assign] + jax.random.normal(kn, (n, d)) * noise
+
+
+def rows() -> list[str]:
+    out = []
+    key = jax.random.PRNGKey(0)
+
+    # --- real: partial_fit marginal cost + one-epoch quality -------------
+    n, k, d, bs = 40_000, 64, 32, 4096
+    x = _blobs(key, n, k, d)
+    cfg = KMeansConfig(k=k, max_iters=10, init="kmeans++")
+    j_full = float(KMeans(cfg).fit(jax.random.PRNGKey(1), x).inertia)
+
+    xs = np.asarray(x)
+    sk = StreamingKMeans(cfg, local_iters=1, seed=1, init_size=2 * bs)
+    for lo in range(0, n, bs):
+        sk.partial_fit(xs[lo:lo + bs])
+    us = C.wall_us(lambda b: sk._partial(jnp.asarray(b), sk.centroids,
+                                         sk.stats),
+                   xs[:bs], reps=3, warmup=1)
+    out.append(C.fmt_row(
+        f"streaming_partial_fit_N{bs}_K{k}_d{d}", us,
+        f"inertia_ratio_1epoch={sk.inertia(x) / j_full:.3f}"))
+
+    # --- modeled: incremental vs refit for the clustered-KV serve path ----
+    # one flush folds R new tokens into K clusters over an S-token cache
+    for s_ctx, k_c, d_h, r in [(131_072, 128, 128, 512),
+                               (524_288, 256, 128, 1024)]:
+        t_inc = (C.assign_flops(r, k_c, d_h) / C.PEAK
+                 + C.lloyd_bytes_fused(r, k_c, d_h, b=2) / C.BW)
+        iters = 4
+        t_refit = iters * (C.assign_flops(s_ctx, k_c, d_h) / C.PEAK
+                           + C.lloyd_bytes_fused(s_ctx, k_c, d_h, b=2)
+                           / C.BW)
+        out.append(C.fmt_row(
+            f"streaming_flush_modeled_S{s_ctx}_K{k_c}_R{r}", t_inc * 1e6,
+            f"refit_us={t_refit * 1e6:.1f};speedup={t_refit / t_inc:.0f}x"))
+
+    # --- real: chunked driver tol early stopping --------------------------
+    xx = np.asarray(_blobs(jax.random.PRNGKey(2), 20_000, 16, 16,
+                           noise=0.1))
+    c0 = init_centroids(jax.random.PRNGKey(3), jnp.asarray(xx), 16,
+                        "random")
+    ck = ChunkedKMeans(KMeansConfig(k=16, max_iters=30, tol=1e-3),
+                       chunk_size=4096)
+    import time
+    t0 = time.perf_counter()
+    ck.fit(xx, c0)
+    us = (time.perf_counter() - t0) * 1e6
+    out.append(C.fmt_row(
+        "chunked_earlystop_tol1e-3", us,
+        f"iters_run={ck.iters_run};max_iters=30"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(rows()))

@@ -4,6 +4,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_kernels   -> paper Fig. 4 (kernel breakdown)
   bench_e2e       -> paper Fig. 3 (end-to-end regimes)
   bench_outofcore -> paper §5.3 (billion-point streaming)
+  bench_streaming -> online/mini-batch driver + incremental-vs-refit model
   bench_compile   -> paper Fig. 5 (time-to-first-run)
   roofline        -> dry-run roofline table (deliverable g)
 """
@@ -17,11 +18,12 @@ def main() -> None:
     print("name,us_per_call,derived")
     sections = []
     from benchmarks import (bench_compile, bench_e2e, bench_kernels,
-                            bench_outofcore, roofline)
+                            bench_outofcore, bench_streaming, roofline)
     sections = [
         ("kernels", bench_kernels.rows),
         ("e2e", bench_e2e.rows),
         ("outofcore", bench_outofcore.rows),
+        ("streaming", bench_streaming.rows),
         ("compile", bench_compile.rows),
         ("roofline", roofline.rows),
     ]

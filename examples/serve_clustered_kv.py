@@ -21,6 +21,10 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=192)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--recent", type=int, default=64,
+                    help="recent-buffer size; when it fills mid-generation "
+                         "the engine re-clusters incrementally via a "
+                         "warm-start partial_fit (set < --gen to see it)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch).reduced()
@@ -33,13 +37,16 @@ def main():
     results = {}
     for mode in ("dense", "clustered"):
         eng = Engine(cfg, params, ServeConfig(
-            max_seq=args.prompt_len + args.gen + 8, mode=mode, recent=64))
+            max_seq=args.prompt_len + args.gen + 8, mode=mode,
+            recent=args.recent))
         t0 = time.time()
         out = eng.generate(prompts, args.gen)
         out.block_until_ready()
         results[mode] = (out, time.time() - t0)
+        extra = (f", {eng.recluster_count} incremental re-clusters"
+                 if mode == "clustered" else "")
         print(f"{mode:10s}: {args.batch * args.gen} tokens in "
-              f"{results[mode][1]:.2f}s (incl. compile + clustering)")
+              f"{results[mode][1]:.2f}s (incl. compile + clustering{extra})")
 
     agree = float(jnp.mean(
         (results["dense"][0] == results["clustered"][0]).astype(jnp.float32)))

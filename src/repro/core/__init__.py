@@ -5,6 +5,8 @@ Public API:
   lloyd_step                            — single online iteration
   make_distributed_kmeans               — shard_map multi-chip/pod variant
   ChunkedKMeans                         — out-of-core streaming driver
+  StreamingKMeans / SufficientStats     — online/mini-batch driver + the
+                                          shared reduction type
   choose_blocks / TPU_V5E               — cache-aware compile heuristic
 """
 from repro.core.chunked import ChunkedKMeans, ChunkedStats
@@ -13,11 +15,14 @@ from repro.core.heuristics import Hardware, TPU_V5E, choose_blocks
 from repro.core.init import init_centroids, kmeans_plus_plus, random_init
 from repro.core.kmeans import (KMeans, KMeansConfig, KMeansState, lloyd_stats,
                                lloyd_step, make_kmeans_fn)
+from repro.core.streaming import (StreamingKMeans, SufficientStats,
+                                  partial_fit_step)
 
 __all__ = [
     "KMeans", "KMeansConfig", "KMeansState", "lloyd_stats", "lloyd_step",
     "make_kmeans_fn",
     "make_distributed_kmeans", "shard_points", "ChunkedKMeans", "ChunkedStats",
+    "StreamingKMeans", "SufficientStats", "partial_fit_step",
     "choose_blocks", "Hardware", "TPU_V5E", "init_centroids",
     "kmeans_plus_plus", "random_init",
 ]

@@ -5,8 +5,9 @@ host-to-device copies against compute on CUDA streams. The JAX/TPU
 analogue uses the asynchronous-dispatch model: ``jax.device_put`` of chunk
 ``i+1`` is issued *before* the (already enqueued, still executing) kernels
 for chunk ``i`` are consumed, so the DMA engine overlaps the transfer with
-compute. Because the per-chunk outputs ``(s, n, inertia)`` are tiny
-sufficient statistics, nothing but the two staging buffers is ever
+compute. Because the per-chunk output is a tiny ``SufficientStats``
+(core.streaming — the reduction type shared with the distributed and
+streaming drivers), nothing but the two staging buffers is ever
 resident — peak device memory is O(chunk + K·d), independent of N.
 
 Exactness: statistics are summed in f32 across chunks; the resulting
@@ -22,9 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import kmeans as _km
 from repro.core.kmeans import KMeansConfig
-from repro.kernels import ops
+from repro.core.streaming import SufficientStats
 
 Array = jax.Array
 
@@ -58,7 +58,7 @@ class ChunkedStats:
 
 
 def _chunk_step(cfg: KMeansConfig):
-    """Per-chunk partial statistics, jitted once (static chunk shape).
+    """Per-chunk partial ``SufficientStats``, jitted once (static shape).
 
     Out-of-core is where the fused FlashLloyd pass pays off most: one HBM
     stream of the chunk instead of three (assign read, argsort + row
@@ -67,9 +67,9 @@ def _chunk_step(cfg: KMeansConfig):
     """
 
     @jax.jit
-    def step(x: Array, c: Array):
-        _, s, cnt, j = _km.lloyd_stats(x, c, cfg)
-        return s, cnt, j
+    def step(x: Array, c: Array) -> SufficientStats:
+        stats, _ = SufficientStats.from_batch(x, c, cfg)
+        return stats
 
     return step
 
@@ -91,6 +91,8 @@ class ChunkedKMeans:
         self._step = _chunk_step(cfg)
         self._stepped_shapes: set[tuple] = set()
         self.stats = ChunkedStats()
+        self.last_stats: SufficientStats | None = None
+        self.iters_run = 0
 
     def _chunks(self, data) -> Iterator[np.ndarray]:
         if callable(data):
@@ -105,11 +107,12 @@ class ChunkedKMeans:
 
         Returns (c_new, inertia). Double-buffered: the H2D for the next
         chunk is issued while the current chunk's kernels are in flight.
+        Per-chunk ``SufficientStats`` are merged on device (the same
+        associative reduction the distributed driver psums); the merged
+        stats of the last iteration stay readable as ``self.last_stats``.
         """
         k, d = self.cfg.k, c.shape[1]
-        s_tot = jnp.zeros((k, d), jnp.float32)
-        n_tot = jnp.zeros((k,), jnp.float32)
-        inertia = jnp.zeros((), jnp.float32)
+        stats = SufficientStats.zero(k, d)
 
         t_wall = time.perf_counter()
         it = self._chunks(data)
@@ -130,7 +133,7 @@ class ChunkedKMeans:
                 # Drain the in-order device queue (untimed) so the
                 # sampled interval covers only this chunk's work, not
                 # the backlog of previously dispatched chunks.
-                jax.block_until_ready((s_tot, n_tot, inertia))
+                jax.block_until_ready(stats)
             t0 = time.perf_counter()
             buf = jax.device_put(nxt)            # async H2D into slot A
             if sampled:
@@ -140,27 +143,41 @@ class ChunkedKMeans:
                 self.stats.dispatch_h2d_seconds += time.perf_counter() - t0
             nxt = next(it, None)
             t0 = time.perf_counter()
-            s, n, j = self._step(buf, c)          # enqueued; overlaps next put
+            part = self._step(buf, c)             # enqueued; overlaps next put
             if sampled:
-                jax.block_until_ready((s, n, j))
+                jax.block_until_ready(part)
                 self.stats.compute_seconds += time.perf_counter() - t0
                 self.stats.sampled_chunks += 1
             else:
                 self.stats.dispatch_compute_seconds += (
                     time.perf_counter() - t0)
-            s_tot = s_tot + s
-            n_tot = n_tot + n
-            inertia = inertia + j
+            stats = stats.merge(part)
             self.stats.chunks += 1
-        c_new = ops.finalize_centroids(s_tot, n_tot, c)
+        self.last_stats = stats
+        c_new = stats.finalize(c)
         c_new.block_until_ready()
         self.stats.wall_seconds += time.perf_counter() - t_wall
-        return c_new, inertia
+        return c_new, stats.inertia
 
-    def fit(self, data, c0: Array, iters: int | None = None
-            ) -> tuple[Array, Array]:
+    def fit(self, data, c0: Array, iters: int | None = None,
+            tol: float | None = None) -> tuple[Array, Array]:
+        """Lloyd iterations with ``tol``-based early stopping.
+
+        Mirrors ``make_kmeans_fn``: after each full-dataset iteration the
+        squared centroid shift is compared against ``tol`` (default
+        ``cfg.tol``); iteration stops once ``shift <= tol``. The number
+        of iterations actually run is exposed as ``self.iters_run``.
+        """
+        tol = self.cfg.tol if tol is None else tol
         c = c0
         inertia = jnp.array(jnp.inf)
+        self.iters_run = 0
         for _ in range(iters if iters is not None else self.cfg.max_iters):
-            c, inertia = self.iterate(data, c)
+            c_new, inertia = self.iterate(data, c)
+            shift = float(jnp.sum((c_new.astype(jnp.float32)
+                                   - c.astype(jnp.float32)) ** 2))
+            c = c_new
+            self.iters_run += 1
+            if shift <= tol:
+                break
         return c, inertia

@@ -2,50 +2,70 @@
 
 The centroid statistics ``(s_k, n_k)`` are *sufficient statistics* and
 associative, so the out-of-core chunk reduction (core.chunked), the
-data-parallel multi-chip reduction here, and the multi-pod reduction are
-all the same tree:
+streaming accumulator (core.streaming), the data-parallel multi-chip
+reduction here, and the multi-pod reduction are all the same tree:
 
-  per-shard FlashAssign  ->  per-shard Sort-Inverse partials
-       ->  psum over data axes  ->  replicated centroid update.
+  per-shard Lloyd statistics (fused FlashLloyd or assign + sort-inverse,
+  per ``cfg.step_impl``)  ->  psum over data axes  ->  replicated
+  ``finalize_centroids`` update.
 
 Two sharding modes compose:
 
 - **N-sharding** (``data_axes``): points sharded; centroids replicated.
   One psum of (K, d) + (K,) per iteration — collective bytes are
   O(K d), independent of N (this is what makes billion-point multi-pod
-  runs cheap).
+  runs cheap). The per-shard statistics go through ``kmeans.lloyd_stats``
+  unchanged, so the fused single-pass FlashLloyd kernel runs distributed
+  exactly as it does on one chip.
 - **K-sharding** (``k_axis``): centroids sharded too (very large K). The
   argmin is computed in two stages: local argmin over the centroid shard,
   then a cross-shard (value, index) min-reduction via all_gather of the
   per-shard minima — O(N_local · P_k) bytes, still ≪ materializing D.
   Update statistics are computed *only for the locally-owned centroid
   range* (ids outside the range are remapped to a dummy bucket), so the
-  update work is K-parallel with zero duplication.
+  update work is K-parallel with zero duplication. Because the global
+  assignment is only known *after* the cross-shard reduce, the fused
+  kernel (which bakes statistics into the assignment sweep) cannot apply
+  here; a fused-configured ``cfg`` transparently uses the sort-inverse
+  statistics kernel for this stats-only pass.
 """
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import kmeans as _km
 from repro.core.kmeans import KMeansConfig
 from repro.kernels import ops
 
 Array = jax.Array
 
 
+def shard_map_compat(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions.
+
+    jax >= 0.6 exports it at top level (replication checking spelled
+    ``check_vma``); 0.4.x only has ``jax.experimental.shard_map.shard_map``
+    (spelled ``check_rep``). Checking is disabled either way: pallas_call
+    outputs carry no replication/vma info.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+
+
 def _local_stats(x: Array, a: Array, k: int, cfg: KMeansConfig):
-    if cfg.update_impl == "fused":
-        raise NotImplementedError(
-            "update_impl='fused' is not wired into the distributed driver "
-            "yet; use sort_inverse/scatter/dense_onehot here")
     blk = cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
     return ops.centroid_stats(
-        x, a, k=k, impl=cfg.update_impl, block_n=blk.update_block_n,
-        block_k=blk.update_block_k, interpret=cfg.interpret)
+        x, a, k=k, impl=cfg.stats_only_update_impl(),
+        block_n=blk.update_block_n, block_k=blk.update_block_k,
+        interpret=cfg.interpret)
 
 
 def _local_assign(x: Array, c: Array, cfg: KMeansConfig):
@@ -84,8 +104,7 @@ def make_distributed_kmeans(mesh: Mesh, cfg: KMeansConfig,
 
             def body(i, carry):
                 c, _, _, err_s, err_n = carry
-                a, m = _local_assign(x, c, cfg=cfg)
-                s, n = _local_stats(x, a, cfg.k, cfg=cfg)
+                a, s, n, j_local = _km.lloyd_stats(x, c, cfg)
                 if compress_pod_axis is None:
                     s = jax.lax.psum(s, data_axes)
                     n = jax.lax.psum(n, data_axes)
@@ -96,10 +115,8 @@ def make_distributed_kmeans(mesh: Mesh, cfg: KMeansConfig,
                         s, err_s, compress_pod_axis)
                     n, err_n = compression.ef_quantized_allreduce(
                         n, err_n, compress_pod_axis)
-                inertia = jax.lax.psum(jnp.sum(m), data_axes)
-                c_new = s / jnp.maximum(n, 1.0)[:, None]
-                c_new = jnp.where((n > 0)[:, None], c_new,
-                                  c.astype(jnp.float32)).astype(c.dtype)
+                inertia = jax.lax.psum(j_local, data_axes)
+                c_new = ops.finalize_centroids(s, n, c)
                 return c_new, a, inertia, err_s, err_n
 
             zero_s = jnp.zeros((cfg.k, x.shape[1]), jnp.float32)
@@ -110,11 +127,10 @@ def make_distributed_kmeans(mesh: Mesh, cfg: KMeansConfig,
                  jnp.array(jnp.inf, jnp.float32), zero_s, zero_n))
             return c, a, inertia
 
-        fn = jax.shard_map(
+        fn = shard_map_compat(
             shard_fn, mesh=mesh,
             in_specs=(P(data_axes, None), P(None, None)),
             out_specs=(P(None, None), P(data_axes), P()),
-            check_vma=False,   # pallas_call outputs carry no vma info
         )
         return jax.jit(fn)
 
@@ -146,9 +162,7 @@ def make_distributed_kmeans(mesh: Mesh, cfg: KMeansConfig,
             s, n = s[:k_local], n[:k_local]
             s = jax.lax.psum(s, data_axes)
             n = jax.lax.psum(n, data_axes)
-            c_new = s / jnp.maximum(n, 1.0)[:, None]
-            c_new = jnp.where((n > 0)[:, None], c_new,
-                              c_local.astype(jnp.float32)).astype(c_local.dtype)
+            c_new = ops.finalize_centroids(s, n, c_local)
             return c_new, a_glob.astype(jnp.int32), inertia
 
         c, a, inertia = jax.lax.fori_loop(
@@ -157,11 +171,10 @@ def make_distributed_kmeans(mesh: Mesh, cfg: KMeansConfig,
              jnp.array(jnp.inf, jnp.float32)))
         return c, a, inertia
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         shard_fn, mesh=mesh,
         in_specs=(P(data_axes, None), P(k_axis, None)),
         out_specs=(P(k_axis, None), P(data_axes), P()),
-        check_vma=False,   # pallas_call outputs carry no vma info
     )
     return jax.jit(fn)
 

@@ -10,6 +10,10 @@ Array = jax.Array
 def random_init(key: Array, x: Array, k: int) -> Array:
     """k distinct data points, uniformly sampled."""
     n = x.shape[0]
+    if k > n:
+        raise ValueError(
+            f"random_init needs at least k data points to draw k distinct "
+            f"centroids, got k={k} > n={n}")
     idx = jax.random.choice(key, n, (k,), replace=False)
     return jnp.take(x, idx, axis=0)
 
@@ -32,8 +36,13 @@ def kmeans_plus_plus(key: Array, x: Array, k: int) -> Array:
     def body(i, carry):
         cents, min_d, key = carry
         key, kd = jax.random.split(key)
-        # Gumbel-max categorical draw proportional to min_d.
+        # Gumbel-max categorical draw proportional to min_d. When every
+        # remaining min_d is zero (all points coincide with a chosen
+        # centroid) the D² distribution is degenerate; fall back to a
+        # uniform draw instead of argmax-over-(-inf) always picking row 0.
         logits = jnp.where(min_d > 0, jnp.log(min_d), -jnp.inf)
+        logits = jnp.where(jnp.any(min_d > 0), logits,
+                           jnp.zeros_like(logits))
         idx = jnp.argmax(logits + jax.random.gumbel(kd, (n,)))
         c_new = jnp.take(x32, idx, axis=0)
         cents = jax.lax.dynamic_update_index_in_dim(cents, c_new, i, 0)

@@ -82,6 +82,18 @@ class KMeansConfig:
             n, self.k, d, dtype_bytes=dtype_bytes,
             blk=blk if blk is not None else self.block)
 
+    def stats_only_update_impl(self) -> str:
+        """Update impl for a stats-only pass over *given* assignments.
+
+        The fused step computes statistics jointly with its own argmin
+        sweep, so it has no stats-only form; fused-configured cfgs fall
+        back to the sort-inverse kernel (used by the K-sharded
+        distributed update and the masked streaming batch).
+        """
+        if self.update_impl == "fused" or self.step_impl == "fused":
+            return "sort_inverse"
+        return self.update_impl
+
 
 class KMeansState(NamedTuple):
     centroids: Array       # (K, d)
@@ -191,9 +203,16 @@ class KMeans:
         keys = jax.random.split(key, b)
         return self._fit_batched(keys, x)
 
+    def _cast(self, x: Array) -> Array:
+        """Apply ``cfg.dtype`` exactly as ``fit`` does, so every entry
+        point computes distances in the same precision (a dtype override
+        must not make ``predict`` disagree with fit-time assignments)."""
+        return x if self.cfg.dtype is None else x.astype(self.cfg.dtype)
+
     def iterate(self, x: Array, c: Array) -> tuple[Array, Array, Array]:
-        return self._step(x, c)
+        return self._step(self._cast(x), self._cast(c))
 
     def predict(self, x: Array, c: Array) -> Array:
+        x, c = self._cast(x), self._cast(c)
         blk = self.cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
         return _assign(x, c, self.cfg, blk)[0]

@@ -1,0 +1,292 @@
+"""Streaming / mini-batch k-means on top of the fused flash-kmeans kernels.
+
+The paper's pitch is that exact k-means becomes an *online primitive*
+rather than an offline preprocessing step. The enabler is that one Lloyd
+iteration factors through tiny **sufficient statistics** — per-cluster
+point sums, counts and the batch inertia — which are associative under
+addition and closed under exponential down-weighting. ``SufficientStats``
+is that reduction type, shared by three drivers:
+
+- ``ChunkedKMeans`` (core.chunked): out-of-core chunks reduce to one
+  ``SufficientStats`` per iteration — an *exact* full-batch Lloyd step.
+- ``make_distributed_kmeans`` (core.distributed): per-shard stats are
+  psum'd — the same tree, across chips instead of chunks.
+- ``StreamingKMeans`` (here): stats persist *across* batches with an
+  optional decay, turning the same kernels into Liberty-style online /
+  Sculley-style mini-batch k-means (warm-started, never refit from
+  scratch).
+
+The per-batch kernel work is exactly ``core.kmeans.lloyd_stats`` — the
+fused single-pass FlashLloyd kernel or the two-pass assign + sort-inverse
+pipeline, picked by ``KMeansConfig.step_impl`` — so the streaming layer
+adds no new dataflow, only a persistence policy for the reduction.
+
+Semantics of ``partial_fit`` (decayed mini-batch Lloyd): with running
+stats ``(S, N)``, decay ``gamma`` and a batch contributing ``(s, n)``
+under the current centroids,
+
+    S' = gamma * S + s,   N' = gamma * N + n,   c' = S' / N'
+
+``gamma = 1`` recovers Bottou-Bengio online k-means (every past point
+keeps full weight — over one epoch of disjoint batches this telescopes to
+within one re-assignment of a full-batch Lloyd pass); ``gamma < 1`` gives
+an exponentially-weighted window (half-life ``ln 2 / ln(1/gamma)``
+batches) that tracks distribution drift.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kmeans as _km
+from repro.core.init import init_centroids
+from repro.core.kmeans import KMeansConfig
+from repro.kernels import ops
+
+Array = jax.Array
+
+
+class SufficientStats(NamedTuple):
+    """The single reduction type of every flash-kmeans driver.
+
+    ``sums`` (K, d) f32, ``counts`` (K,) f32, ``inertia`` () f32. All
+    fields accumulate in f32 regardless of the input dtype (same contract
+    as the kernels). The algebra:
+
+    - ``merge`` is the associative/commutative reduction (chunks, shards,
+      batches are all summed the same way);
+    - ``scale`` applies an exponential decay to past evidence (inertia is
+      scaled too, so ``inertia / counts.sum()`` stays a per-point average
+      under any decay schedule);
+    - ``finalize`` is the Lloyd M-step with the empty-cluster fallback
+      (clusters with zero weight keep their previous centroid).
+    """
+
+    sums: Array     # (K, d) f32 — per-cluster point sums
+    counts: Array   # (K,) f32   — per-cluster (decayed) point counts
+    inertia: Array  # () f32     — sum of min squared distances
+
+    @classmethod
+    def zero(cls, k: int, d: int) -> "SufficientStats":
+        return cls(jnp.zeros((k, d), jnp.float32),
+                   jnp.zeros((k,), jnp.float32),
+                   jnp.zeros((), jnp.float32))
+
+    @classmethod
+    def from_batch(cls, x: Array, c: Array, cfg: KMeansConfig,
+                   blk=None, mask: Array | None = None
+                   ) -> tuple["SufficientStats", Array]:
+        """Assign ``x`` to ``c`` and reduce. Returns (stats, assignments).
+
+        Dispatches through ``lloyd_stats`` — fused FlashLloyd or two-pass
+        per ``cfg.step_impl`` — so every driver inherits the kernel
+        crossover rule unchanged.
+
+        ``mask`` (N,) bool excludes rows from the statistics (their
+        assignments are still returned): masked rows are remapped to a
+        dummy bucket that is sliced off — the same trick the K-sharded
+        distributed update uses. The fused step bakes statistics into its
+        own argmin sweep and cannot skip rows, so the masked path always
+        takes the two-pass stats kernel.
+        """
+        if mask is None:
+            a, s, cnt, j = _km.lloyd_stats(x, c, cfg, blk)
+            return cls(s, cnt, jnp.asarray(j, jnp.float32)), a
+        if blk is None:
+            blk = cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
+        a, m = _km._assign(x, c, cfg, blk)
+        a_eff = jnp.where(mask, a, cfg.k).astype(jnp.int32)
+        s, cnt = ops.centroid_stats(
+            x, a_eff, k=cfg.k + 1, impl=cfg.stats_only_update_impl(),
+            block_n=blk.update_block_n, block_k=blk.update_block_k,
+            interpret=cfg.interpret)
+        j = jnp.sum(jnp.where(mask, m, 0.0))
+        return cls(s[:cfg.k], cnt[:cfg.k], j), a
+
+    @classmethod
+    def from_centroids(cls, c: Array, counts: Array) -> "SufficientStats":
+        """Reconstruct stats from centroids + weights (``sums = c * n``).
+
+        Exact whenever ``c`` was produced by ``finalize`` of stats with
+        these counts — the lossless inverse used to warm-start a
+        ``partial_fit`` from an already-clustered structure (e.g. the
+        serve engine's bucketed KV cache) without re-reading its points.
+        """
+        counts = counts.astype(jnp.float32)
+        return cls(c.astype(jnp.float32) * counts[:, None], counts,
+                   jnp.zeros((), jnp.float32))
+
+    def merge(self, other: "SufficientStats") -> "SufficientStats":
+        return SufficientStats(self.sums + other.sums,
+                               self.counts + other.counts,
+                               self.inertia + other.inertia)
+
+    def scale(self, gamma) -> "SufficientStats":
+        return SufficientStats(self.sums * gamma, self.counts * gamma,
+                               self.inertia * gamma)
+
+    def finalize(self, c_prev: Array) -> Array:
+        return ops.finalize_centroids(self.sums, self.counts, c_prev)
+
+    @property
+    def weight(self) -> Array:
+        """Total (decayed) point weight currently represented."""
+        return jnp.sum(self.counts)
+
+
+def partial_fit_step(x: Array, c: Array, stats: SufficientStats, *,
+                     cfg: KMeansConfig, decay: float = 1.0,
+                     local_iters: int = 1, mask: Array | None = None
+                     ) -> tuple[Array, SufficientStats, Array, Array]:
+    """One decayed mini-batch Lloyd update, warm-started at ``c``.
+
+    Past evidence is decayed once per call; the batch may be re-assigned
+    ``local_iters`` times against the tentatively-updated centroids, but
+    only the final batch statistics are committed (no double counting).
+    ``mask`` (N,) bool excludes padding rows from the statistics (see
+    ``SufficientStats.from_batch``). Pure and jittable. Returns
+    ``(c_new, stats_new, assignments, batch_inertia)``.
+    """
+    base = stats.scale(decay)
+    merged, a, batch = base, None, None
+    for _ in range(max(1, local_iters)):
+        batch, a = SufficientStats.from_batch(x, c, cfg, mask=mask)
+        merged = base.merge(batch)
+        c = merged.finalize(c)
+    return c, merged, a, batch.inertia
+
+
+class StreamingKMeans:
+    """Online / mini-batch exact-assignment k-means (warm-start, no refit).
+
+    >>> sk = StreamingKMeans(KMeansConfig(k=64), decay=0.95)
+    >>> for batch in stream:                     # (B_i, d) host or device
+    ...     sk.partial_fit(batch)                # decayed mini-batch Lloyd
+    >>> sk.update(x_new)                         # append-only refinement
+    >>> a = sk.predict(x)
+
+    State between calls is two device residents: the centroids (K, d) and
+    the running ``SufficientStats`` — O(K·d) memory however long the
+    stream. Each ``partial_fit`` costs one ``lloyd_stats`` pass over the
+    batch per local iteration (the fused kernel when the crossover rule
+    says so), making the marginal cost of staying clustered O(batch), not
+    O(total data seen).
+
+    ``decay=1.0``: every past point keeps full weight (online Lloyd).
+    ``decay<1.0``: exponentially-weighted window for drifting streams.
+    Batches of a repeated shape reuse one jitted step; the centroids are
+    initialized with ``cfg.init`` from the first batch — or, with
+    ``init_size=m``, from the first ``m`` buffered points (mini-batch
+    k-means is sensitive to seeing too few modes at init; buffering a few
+    batches before the k-means++ draw is the standard fix — the buffered
+    points are folded into the statistics on bootstrap, so every point
+    still counts exactly once).
+    """
+
+    def __init__(self, cfg: KMeansConfig, *, decay: float = 1.0,
+                 local_iters: int = 1, seed: int = 0,
+                 init_size: int | None = None):
+        if not (0.0 < decay <= 1.0):
+            raise ValueError(f"decay must be in (0, 1], got {decay}")
+        self.cfg = cfg
+        self.decay = float(decay)
+        self.local_iters = int(local_iters)
+        self.init_size = init_size
+        self.centroids: Array | None = None
+        self.stats: SufficientStats | None = None
+        self.n_batches = 0
+        self.last_batch_inertia: Array | None = None
+        self._init_buf: list = []
+        self._pending: Array | None = None
+        self._key = jax.random.PRNGKey(seed)
+        self._partial = jax.jit(functools.partial(
+            partial_fit_step, cfg=cfg, decay=self.decay,
+            local_iters=self.local_iters))
+        # update(): append-only — no decay, single assignment pass (same
+        # computation as _partial at the default config; share the jit
+        # cache instead of compiling it twice)
+        if self.decay == 1.0 and self.local_iters == 1:
+            self._append = self._partial
+        else:
+            self._append = jax.jit(functools.partial(
+                partial_fit_step, cfg=cfg, decay=1.0, local_iters=1))
+
+    # ------------------------------------------------------------------
+
+    def _cast(self, x: Array) -> Array:
+        x = jnp.asarray(x)
+        return x if self.cfg.dtype is None else x.astype(self.cfg.dtype)
+
+    def _bootstrap(self, batch: Array) -> bool:
+        """Initialize centroids; returns False while still buffering.
+
+        With ``init_size`` set, early batches are buffered (host-side)
+        until enough points arrived for the ``cfg.init`` draw; they are
+        then folded in as one statistics batch so nothing is dropped.
+        """
+        if self.init_size is not None:
+            self._init_buf.append(jnp.asarray(batch))
+            if sum(b.shape[0] for b in self._init_buf) < self.init_size:
+                return False
+            batch = jnp.concatenate(self._init_buf, axis=0)
+            self._init_buf = []
+        self._key, k0 = jax.random.split(self._key)
+        self.centroids = init_centroids(k0, batch, self.cfg.k, self.cfg.init)
+        self.stats = SufficientStats.zero(self.cfg.k, batch.shape[1])
+        self._pending = batch
+        return True
+
+    def partial_fit(self, batch: Array) -> "StreamingKMeans":
+        """Fold one mini-batch into the model (decayed warm-start step)."""
+        batch = self._cast(batch)
+        self.n_batches += 1
+        if self.centroids is None:
+            if not self._bootstrap(batch):
+                return self
+            batch, self._pending = self._pending, None
+        self.centroids, self.stats, _, self.last_batch_inertia = \
+            self._partial(batch, self.centroids, self.stats)
+        return self
+
+    def update(self, x_new: Array) -> Array:
+        """Append-only online refinement: new points join the model at
+        full weight (no decay of history). Returns their assignments
+        (of the whole init buffer if this call completes the bootstrap)."""
+        x_new = self._cast(x_new)
+        if self.centroids is None:
+            buffered = sum(b.shape[0] for b in self._init_buf)
+            if (self.init_size is not None
+                    and buffered + x_new.shape[0] < self.init_size):
+                # refuse *before* buffering: a caught-and-retried batch
+                # must not end up counted twice
+                raise ValueError(
+                    "update() needs initialized centroids; still buffering "
+                    f"init points ({buffered + x_new.shape[0]} of "
+                    f"{self.init_size}) — feed more data or use "
+                    "partial_fit for the warm-up phase")
+            self._bootstrap(x_new)
+            x_new, self._pending = self._pending, None
+        self.centroids, self.stats, a, self.last_batch_inertia = \
+            self._append(x_new, self.centroids, self.stats)
+        self.n_batches += 1
+        return a
+
+    def predict(self, x: Array) -> Array:
+        if self.centroids is None:
+            raise ValueError("predict() before any partial_fit/update")
+        x = self._cast(x)
+        blk = self.cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
+        return _km._assign(x, self.centroids.astype(x.dtype),
+                           self.cfg, blk)[0]
+
+    def inertia(self, x: Array) -> float:
+        """Current full-batch inertia of ``x`` under the live centroids."""
+        if self.centroids is None:
+            raise ValueError("inertia() before any partial_fit/update")
+        x = self._cast(x)
+        blk = self.cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
+        _, m = _km._assign(x, self.centroids.astype(x.dtype), self.cfg, blk)
+        return float(jnp.sum(m))

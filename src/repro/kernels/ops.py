@@ -210,8 +210,13 @@ def centroid_stats(x: Array, a: Array, *, k: int, impl: str = "sort_inverse",
 
 
 def finalize_centroids(s: Array, cnt: Array, c_prev: Array) -> Array:
-    """sums/counts -> centroids with empty-cluster fallback (keep old)."""
-    new_c = s / jnp.maximum(cnt, 1.0)[:, None]
+    """sums/counts -> centroids with empty-cluster fallback (keep old).
+
+    Counts may be fractional (decayed streaming statistics), so the safe
+    denominator must preserve ``s / cnt`` for any ``cnt > 0`` — clamping
+    to 1 would shrink low-weight centroids toward the origin.
+    """
+    new_c = s / jnp.where(cnt > 0, cnt, 1.0)[:, None]
     return jnp.where((cnt > 0)[:, None], new_c,
                      c_prev.astype(jnp.float32)).astype(c_prev.dtype)
 

@@ -46,6 +46,7 @@ def _cache_leaf_specs(kv_heads_shardable: bool) -> dict:
             "bk": ("dp", "tp", "sp", None, None),
             "bv": ("dp", "tp", "sp", None, None),
             "bcount": ("dp", "tp", "sp"),
+            "cweight": ("dp", "tp", "sp"),
             "recent_k": ("dp", "tp", None, None),
             "recent_v": ("dp", "tp", None, None),
             "append_k": ("dp", None, "tp", None),
@@ -67,6 +68,7 @@ def _cache_leaf_specs(kv_heads_shardable: bool) -> dict:
         "bk": ("dp", None, "sp", None, "mdl"),
         "bv": ("dp", None, "sp", None, "mdl"),
         "bcount": ("dp", None, "sp"),
+        "cweight": ("dp", None, "sp"),
         "recent_k": ("dp", None, None, "mdl"),
         "recent_v": ("dp", None, None, "mdl"),
         "append_k": ("dp", None, None, None),

@@ -58,19 +58,11 @@ def cluster_keys(keys: Array, kc: int, *, iters: int = 5,
 def _bucketize(values: Array, assign: Array, kc: int, cap: int) -> tuple[Array, Array]:
     """Scatter (S, ...) rows into (kc, cap, ...) buckets by cluster id.
 
-    Sorted-by-cluster order (argsort) => per-cluster slot index is just
-    rank-within-segment; overflow rows (slot >= cap) are dropped.
-    Returns (buckets, counts)."""
-    s = assign.shape[0]
-    order = jnp.argsort(assign)
-    a_sorted = assign[order]
-    v_sorted = values[order]
-    counts = jnp.bincount(assign, length=kc)
-    starts = jnp.cumsum(counts) - counts                     # (kc,)
-    slot = jnp.arange(s) - starts[a_sorted]                  # rank in segment
-    buckets = jnp.zeros((kc, cap) + values.shape[1:], values.dtype)
-    buckets = buckets.at[a_sorted, slot].set(v_sorted, mode="drop")
-    return buckets, jnp.minimum(counts, cap).astype(jnp.int32)
+    The empty-bucket special case of ``append_to_buckets``: overflow rows
+    (slot >= cap) are dropped. Returns (buckets, counts)."""
+    empty = jnp.zeros((kc, cap) + values.shape[1:], values.dtype)
+    return append_to_buckets(empty, jnp.zeros((kc,), jnp.int32), values,
+                             assign)
 
 
 def build_clustered_cache(k_cache: Array, v_cache: Array, *, kc: int,
@@ -93,12 +85,103 @@ def build_clustered_cache(k_cache: Array, v_cache: Array, *, kc: int,
     def r(x, extra):
         return x.reshape(b, kh, *extra)
 
+    # cweight: the true per-cluster point weight the centroids represent
+    # (uncapped — capacity-dropped rows still shaped the centroid). The
+    # incremental refresh carries and decays this instead of the
+    # attention-masking bcount, which saturates at capacity.
+    weights = jax.vmap(lambda a_: jnp.bincount(a_, length=kc))(assigns)
+
     return {
         "centroids": r(cents, (kc, hd)),
         "bk": r(bk, (kc, capacity, hd)),
         "bv": r(bv, (kc, capacity, hd)),
         "bcount": r(counts, (kc,)),
+        "cweight": r(weights.astype(jnp.float32), (kc,)),
     }
+
+
+def append_to_buckets(buckets: Array, bcount: Array, rows: Array,
+                      assign: Array) -> tuple[Array, Array]:
+    """Append new rows into existing cluster buckets.
+
+    buckets: (kc, cap, ...), bcount: (kc,) current fill, rows: (R, ...),
+    assign: (R,) cluster ids. New rows land at ``slot = bcount[a] + rank``
+    (rank within their cluster, sorted order); rows overflowing a bucket's
+    capacity are dropped — the same approximation contract as
+    ``_bucketize``. Returns (buckets', bcount')."""
+    kc, cap = buckets.shape[0], buckets.shape[1]
+    r = assign.shape[0]
+    order = jnp.argsort(assign)
+    a_sorted = assign[order]
+    rows_sorted = rows[order]
+    counts = jnp.bincount(assign, length=kc)
+    starts = jnp.cumsum(counts) - counts
+    rank = jnp.arange(r) - starts[a_sorted]
+    slot = bcount[a_sorted] + rank            # >= cap rows dropped below
+    buckets = buckets.at[a_sorted, slot].set(rows_sorted.astype(
+        buckets.dtype), mode="drop")
+    return buckets, jnp.minimum(bcount + counts, cap).astype(jnp.int32)
+
+
+def refresh_clustered_cache(cache: dict, *, iters: int = 2,
+                            decay: float = 1.0,
+                            interpret: bool | None = None) -> dict:
+    """Fold a full recent buffer into the clustered cache *incrementally*.
+
+    A warm-start decayed ``partial_fit`` (core.streaming) over the new
+    keys: the centroid statistics are reconstructed losslessly from
+    ``(centroids, cweight)`` via ``SufficientStats.from_centroids`` — no
+    re-read of the bucketed keys and no full refit. The refreshed
+    centroids absorb the new tokens, the tokens are appended to their
+    assigned buckets (capacity overflow dropped), and the recent buffer
+    is reset. O(R·Kc·d) per flush instead of the O(S·Kc·d·iters) rebuild.
+
+    ``cweight`` is the carried float per-cluster weight (decayed across
+    flushes); the integer ``bcount`` only masks valid bucket slots and
+    saturates at capacity, so it cannot represent history. ``decay < 1``
+    down-weights the old statistics at each flush so centroids track
+    topic drift within a long generation.
+    """
+    from repro.core import streaming as S
+
+    if not (0.0 < decay <= 1.0):
+        raise ValueError(f"decay must be in (0, 1], got {decay}")
+    b, kh, kc, hd = cache["centroids"].shape
+    cfg = KMeansConfig(k=kc, max_iters=iters, interpret=interpret)
+
+    r = cache["recent_k"].shape[2]
+    # Only the first rlen buffer slots hold real tokens; the tail is
+    # zero-padding that must not enter the statistics or the buckets.
+    valid = jnp.arange(r) < cache["rlen"]
+
+    def one(cents, bk, bv, bcount, cweight, rk, rv):
+        c32 = cents.astype(jnp.float32)
+        stats = S.SufficientStats.from_centroids(c32, cweight)
+        c_new, stats_new, a, _ = S.partial_fit_step(
+            rk.astype(jnp.float32), c32, stats, cfg=cfg, decay=decay,
+            local_iters=iters, mask=valid)
+        a_eff = jnp.where(valid, a, kc)       # out-of-range ids dropped
+        bk2, bc2 = append_to_buckets(bk, bcount, rk, a_eff)
+        bv2, _ = append_to_buckets(bv, bcount, rv, a_eff)
+        return c_new.astype(cents.dtype), bk2, bv2, bc2, stats_new.counts
+
+    def flat(t):
+        return t.reshape((b * kh,) + t.shape[2:])
+
+    cents, bk2, bv2, bc2, cw2 = jax.vmap(one)(
+        flat(cache["centroids"]), flat(cache["bk"]), flat(cache["bv"]),
+        flat(cache["bcount"]), flat(cache["cweight"]),
+        flat(cache["recent_k"]), flat(cache["recent_v"]))
+
+    def unflat(t):
+        return t.reshape((b, kh) + t.shape[1:])
+
+    return dict(cache,
+                centroids=unflat(cents), bk=unflat(bk2), bv=unflat(bv2),
+                bcount=unflat(bc2), cweight=unflat(cw2),
+                recent_k=jnp.zeros_like(cache["recent_k"]),
+                recent_v=jnp.zeros_like(cache["recent_v"]),
+                rlen=jnp.zeros_like(cache["rlen"]))
 
 
 def init_clustered_cache(batch: int, kv_heads: int, head_dim: int, *,
@@ -110,6 +193,7 @@ def init_clustered_cache(batch: int, kv_heads: int, head_dim: int, *,
         "bk": jnp.zeros((batch, kv_heads, kc, capacity, head_dim), dtype),
         "bv": jnp.zeros((batch, kv_heads, kc, capacity, head_dim), dtype),
         "bcount": jnp.zeros((batch, kv_heads, kc), jnp.int32),
+        "cweight": jnp.zeros((batch, kv_heads, kc), jnp.float32),
         "recent_k": jnp.zeros((batch, kv_heads, recent, head_dim), dtype),
         "recent_v": jnp.zeros((batch, kv_heads, recent, head_dim), dtype),
         "rlen": jnp.zeros((), jnp.int32),

@@ -6,7 +6,11 @@ In clustered mode the engine:
   2. clusters each layer's cached keys with flash-kmeans and rebuilds the
      cache in bucketed (sort-inverse) layout,
   3. decodes against the clustered cache; new tokens accumulate in a
-     recent buffer and trigger periodic re-clustering when it fills.
+     recent buffer, and when it fills the engine re-clusters
+     *incrementally*: a warm-start ``partial_fit`` (core.streaming) over
+     just the new keys — bucket statistics are carried forward as
+     ``SufficientStats``, never refit from scratch — then the tokens are
+     appended to their assigned buckets and the buffer resets.
 """
 from __future__ import annotations
 
@@ -33,6 +37,12 @@ class ServeConfig:
     recent: int = 128
     kmeans_iters: int = 4
     temperature: float = 0.0      # 0 = greedy
+    recluster_iters: int = 2      # partial_fit local iterations per flush
+    recluster_decay: float = 1.0  # decay on bucket stats at each flush
+
+
+def _is_clustered(x) -> bool:
+    return isinstance(x, dict) and "centroids" in x
 
 
 class Engine:
@@ -42,10 +52,16 @@ class Engine:
         self.scfg = scfg
         self.params = params
         self.ctx = Ctx(mesh=mesh, compute_dtype=compute_dtype)
+        self.recluster_count = 0   # incremental flushes performed
         self._prefill = jax.jit(functools.partial(
             M.prefill, ctx=self.ctx, cfg=cfg, max_seq=scfg.max_seq))
         self._decode = jax.jit(functools.partial(
             M.decode_step, ctx=self.ctx, cfg=cfg))
+        # per-layer incremental re-cluster (vmapped over the group axis of
+        # each clustered sub-cache, jitted once per cache geometry)
+        self._refresh = jax.jit(jax.vmap(functools.partial(
+            kma.refresh_clustered_cache, iters=scfg.recluster_iters,
+            decay=scfg.recluster_decay)))
 
     # ------------------------------------------------------------------
 
@@ -85,19 +101,41 @@ class Engine:
 
     # ------------------------------------------------------------------
 
+    def _recluster(self, caches):
+        """Flush every clustered sub-cache through the warm-start
+        ``partial_fit`` refresh — no full refit of the bucketed keys."""
+        caches = jax.tree_util.tree_map(
+            lambda x: self._refresh(x) if _is_clustered(x) else x,
+            caches, is_leaf=_is_clustered)
+        self.recluster_count += 1
+        return caches
+
     def generate(self, tokens: Array, steps: int, *,
                  frontend: Array | None = None, key=None) -> Array:
         """tokens: (B, S) prompt -> (B, steps) generated ids."""
         logits, caches, cross = self._prefill(self.params, tokens,
                                               frontend=frontend)
-        if self.scfg.mode == "clustered":
+        clustered = self.scfg.mode == "clustered"
+        if clustered:
             caches = self._cluster_caches(caches, tokens.shape[1])
+            # MLA keeps dense latents — no clustered leaves to refresh
+            clustered = any(map(_is_clustered, jax.tree_util.tree_leaves(
+                caches, is_leaf=_is_clustered)))
         out = []
         tok = self._sample(logits[:, -1], key, 0)
+        # The flush schedule is deterministic host-side (rlen advances by
+        # one per decode, resets to 0 on flush), so a host counter avoids
+        # a per-token device sync that would serialize async dispatch.
+        since_flush = 0
         for i in range(steps):
             out.append(tok)
             logits, caches = self._decode(self.params, tok, caches,
                                           cross_kv=cross)
+            if clustered:
+                since_flush += 1
+                if since_flush >= self.scfg.recent:
+                    caches = self._recluster(caches)
+                    since_flush = 0
             tok = self._sample(logits[:, 0], key, i + 1)
         return jnp.concatenate(out, axis=1)
 

@@ -33,6 +33,36 @@ def test_multi_iteration_convergence(key):
     assert ck.stats.chunks == 4 * 5  # telemetry populated
 
 
+def test_fit_tol_early_stop(key):
+    """Regression: ChunkedKMeans.fit honours cfg.tol — it must stop as
+    soon as the squared centroid shift drops below tolerance instead of
+    always running max_iters full passes over the data."""
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (4, 6)) * 8.0
+    assign = jax.random.randint(ka, (1500,), 0, 4)
+    x = np.asarray(centers[assign] + jax.random.normal(kn, (1500, 6)) * 0.1)
+    c0 = init_centroids(jax.random.PRNGKey(1), jnp.asarray(x), 4,
+                        "random")
+    ck = ChunkedKMeans(KMeansConfig(k=4, max_iters=50, tol=1e-4),
+                       chunk_size=400)
+    c, j = ck.fit(x, c0)
+    assert ck.iters_run < 50  # well-separated blobs converge in a few
+    # converged result matches the monolithic early-stopping fit
+    km = KMeans(KMeansConfig(k=4, max_iters=50, tol=1e-4))
+    st = km.fit(jax.random.PRNGKey(1), jnp.asarray(x))
+    np.testing.assert_allclose(float(j), float(st.inertia), rtol=1e-3)
+
+
+def test_fit_tol_zero_runs_all_iters(key):
+    """tol=0 (the default) keeps the old exhaustive behaviour on data
+    that never reaches an exact fixed point."""
+    x = np.asarray(jax.random.normal(key, (500, 4)))
+    c0 = init_centroids(jax.random.PRNGKey(2), jnp.asarray(x), 3, "random")
+    ck = ChunkedKMeans(KMeansConfig(k=3, max_iters=3), chunk_size=200)
+    ck.fit(x, c0)
+    assert ck.iters_run == 3
+
+
 def test_generator_source(key):
     x = np.asarray(jax.random.normal(key, (600, 4)))
     c0 = init_centroids(jax.random.PRNGKey(3), jnp.asarray(x), 3, "random")

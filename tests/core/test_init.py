@@ -1,0 +1,47 @@
+"""Centroid-initialization edge cases: k > n and degenerate D² mass."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kmeans_plus_plus, random_init
+
+
+def test_random_init_k_gt_n_raises(key):
+    x = jax.random.normal(key, (5, 3))
+    with pytest.raises(ValueError, match="k=8 > n=5"):
+        random_init(key, x, 8)
+
+
+def test_random_init_k_eq_n(key):
+    x = jax.random.normal(key, (6, 3))
+    c = random_init(key, x, 6)
+    # all 6 points drawn exactly once (distinct, order-free)
+    np.testing.assert_allclose(np.sort(np.asarray(c), axis=0),
+                               np.sort(np.asarray(x), axis=0))
+
+
+def test_kmeans_pp_degenerate_uniform_fallback():
+    """With only two distinct values the third draw has zero D² mass
+    everywhere; it must fall back to a uniform draw instead of always
+    picking row 0 (value A)."""
+    a = jnp.zeros((5, 2))
+    b = jnp.ones((5, 2))
+    x = jnp.concatenate([a, b])          # row 0 is value A
+    picked_b = 0
+    for seed in range(20):
+        c = kmeans_plus_plus(jax.random.PRNGKey(seed), x, 3)
+        assert np.all(np.isfinite(np.asarray(c)))
+        # first two draws cover both values (D² sampling is exact)
+        assert {tuple(v) for v in np.asarray(c[:2]).tolist()} == \
+            {(0.0, 0.0), (1.0, 1.0)}
+        if np.allclose(np.asarray(c[2]), 1.0):
+            picked_b += 1
+    # uniform fallback: P(all 20 third-draws hit value A) = 2^-20
+    assert 0 < picked_b < 20, picked_b
+
+
+def test_kmeans_pp_all_identical_points():
+    x = jnp.ones((10, 4)) * 3.0
+    c = kmeans_plus_plus(jax.random.PRNGKey(0), x, 3)
+    np.testing.assert_allclose(np.asarray(c), 3.0)

@@ -89,6 +89,22 @@ def test_kmeans_pp_better_than_random(key):
     assert j["kmeans++"] <= j["random"] * 1.5
 
 
+def test_predict_respects_dtype_override(key):
+    """Regression: with cfg.dtype set, predict/iterate must cast exactly
+    like fit, or predictions disagree with fit-time assignments. The point
+    0.50098 sits right of the f32 midpoint of centroids {0, 1} but rounds
+    to 0.5 in bf16, where the argmin tie-breaks to centroid 0."""
+    c = jnp.array([[0.0], [1.0]])
+    x = jnp.array([[0.50098]])
+    km16 = KMeans(KMeansConfig(k=2, dtype=jnp.bfloat16))
+    km32 = KMeans(KMeansConfig(k=2))
+    assert int(km32.predict(x, c)[0]) == 1
+    assert int(km16.predict(x, c)[0]) == 0  # bf16 tie -> first centroid
+    # iterate sees the same cast: its assignments agree with predict
+    _, a16, _ = km16.iterate(x, c)
+    assert int(a16[0]) == int(km16.predict(x, c)[0])
+
+
 def test_empty_cluster_keeps_centroid(key):
     x = jax.random.normal(key, (50, 4))
     c0 = jnp.concatenate([x[:3], jnp.full((1, 4), 100.0)])  # far centroid

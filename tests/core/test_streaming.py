@@ -1,0 +1,193 @@
+"""Streaming/mini-batch driver: convergence vs full-batch fit, the
+SufficientStats algebra, decay weighting, and the serve engine's
+incremental re-cluster path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (KMeans, KMeansConfig, StreamingKMeans,
+                        SufficientStats, init_centroids)
+
+
+def blobs(key, n=1200, k=6, d=8, spread=6.0, noise=0.25):
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * spread
+    assign = jax.random.randint(ka, (n,), 0, k)
+    return centers[assign] + jax.random.normal(kn, (n, d)) * noise, centers
+
+
+def test_partial_fit_matches_full_fit_inertia(key):
+    """Acceptance criterion: partial_fit over B shuffled mini-batches
+    reaches <= 1.05x the inertia of a full-batch fit on blobs."""
+    x, _ = blobs(key, n=1600, k=6, d=8)
+    cfg = KMeansConfig(k=6, max_iters=30, init="kmeans++")
+    full = KMeans(cfg).fit(jax.random.PRNGKey(7), x)
+    j_full = float(full.inertia)
+
+    perm = jax.random.permutation(jax.random.PRNGKey(8), x.shape[0])
+    xs = np.asarray(x)[np.asarray(perm)]
+    # init_size buffers the first few batches before the k-means++ draw
+    # (a 200-point sample can miss blob modes and strand the warm start
+    # in a bad local minimum — the standard mini-batch k-means remedy)
+    sk = StreamingKMeans(cfg, local_iters=2, seed=7, init_size=800)
+    bs = 200
+    for epoch in range(3):
+        for lo in range(0, len(xs), bs):
+            sk.partial_fit(xs[lo:lo + bs])
+    j_stream = sk.inertia(x)
+    assert j_stream <= 1.05 * j_full, (j_stream, j_full)
+
+
+def test_sufficient_stats_merge_is_exact(key):
+    """Chunk-merged stats == whole-batch stats (the associativity that
+    chunked/distributed/streaming all rely on)."""
+    x, _ = blobs(key, n=800, k=5)
+    c = init_centroids(jax.random.PRNGKey(1), x, 5, "random")
+    cfg = KMeansConfig(k=5)
+    whole, _ = SufficientStats.from_batch(x, c, cfg)
+    merged = SufficientStats.zero(5, x.shape[1])
+    for lo in range(0, 800, 160):
+        part, _ = SufficientStats.from_batch(x[lo:lo + 160], c, cfg)
+        merged = merged.merge(part)
+    np.testing.assert_allclose(np.asarray(whole.sums),
+                               np.asarray(merged.sums), rtol=1e-5,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(whole.counts),
+                               np.asarray(merged.counts))
+    np.testing.assert_allclose(float(whole.inertia), float(merged.inertia),
+                               rtol=1e-5)
+
+
+def test_from_centroids_roundtrip(key):
+    """finalize(from_centroids(c, n)) == c wherever n > 0 — the lossless
+    warm-start reconstruction the serve engine uses. Includes fractional
+    (decayed) weights < 1, which a max(count, 1) denominator would
+    shrink toward the origin."""
+    c = jax.random.normal(key, (6, 8))
+    n = jnp.array([3.0, 0.0, 7.0, 0.25, 0.0, 11.0])
+    stats = SufficientStats.from_centroids(c, n)
+    np.testing.assert_allclose(np.asarray(stats.finalize(c)),
+                               np.asarray(c), rtol=1e-6, atol=1e-6)
+
+
+def test_scale_decay_weighting():
+    stats = SufficientStats(jnp.ones((4, 3)), jnp.full((4,), 2.0),
+                            jnp.array(8.0))
+    half = stats.scale(0.5)
+    np.testing.assert_allclose(np.asarray(half.sums), 0.5)
+    np.testing.assert_allclose(np.asarray(half.counts), 1.0)
+    assert float(half.inertia) == 4.0
+    assert float(half.weight) == 4.0
+
+
+def test_decay_tracks_distribution_drift(key):
+    """With decay < 1 the model forgets the old mode and ends up tighter
+    on the new distribution than a decay-free run."""
+    k1, k2 = jax.random.split(key)
+    old, _ = blobs(k1, n=1200, k=4, d=6, spread=3.0)
+    new, _ = blobs(k2, n=1200, k=4, d=6, spread=3.0)
+    cfg = KMeansConfig(k=4, max_iters=10)
+    js = {}
+    for decay in (1.0, 0.5):
+        sk = StreamingKMeans(cfg, decay=decay, local_iters=2, seed=3)
+        for lo in range(0, 1200, 200):
+            sk.partial_fit(np.asarray(old)[lo:lo + 200])
+        for _ in range(2):
+            for lo in range(0, 1200, 200):
+                sk.partial_fit(np.asarray(new)[lo:lo + 200])
+        js[decay] = sk.inertia(new)
+    assert js[0.5] <= js[1.0] * 1.001, js
+
+
+def test_update_append_only(key):
+    """update() adds points at full weight, never decays history."""
+    x, _ = blobs(key, n=600, k=4)
+    sk = StreamingKMeans(KMeansConfig(k=4), seed=1)
+    sk.partial_fit(np.asarray(x)[:400])
+    w0 = float(sk.stats.weight)
+    a = sk.update(np.asarray(x)[400:500])
+    assert a.shape == (100,)
+    assert int(a.min()) >= 0 and int(a.max()) < 4
+    assert float(sk.stats.weight) == pytest.approx(w0 + 100)
+    assert np.isfinite(sk.inertia(x))
+
+
+def test_uninitialized_and_buffering_guards(key):
+    """Clear errors before bootstrap; a refused update() must not retain
+    the batch (retry would double-count it)."""
+    x, _ = blobs(key, n=300, k=3, d=4)
+    sk = StreamingKMeans(KMeansConfig(k=3), init_size=250)
+    with pytest.raises(ValueError, match="before any partial_fit"):
+        sk.inertia(x)
+    with pytest.raises(ValueError, match="still buffering"):
+        sk.update(np.asarray(x)[:100])
+    sk.partial_fit(np.asarray(x)[:100])     # buffered, not yet initialized
+    with pytest.raises(ValueError, match="200 of 250"):
+        sk.update(np.asarray(x)[100:200])   # refused AND not buffered
+    sk.partial_fit(np.asarray(x)[100:200])  # 200 buffered
+    sk.partial_fit(np.asarray(x)[200:300])  # 300 >= 250 -> bootstrap
+    assert sk.centroids is not None
+    # every point counted exactly once despite the refused update()
+    assert float(sk.stats.weight) == pytest.approx(300.0)
+
+
+def test_streaming_respects_cfg_dtype(key):
+    x, _ = blobs(key, n=300, k=3, d=4)
+    sk = StreamingKMeans(KMeansConfig(k=3, dtype=jnp.bfloat16))
+    sk.partial_fit(np.asarray(x))
+    assert sk.centroids.dtype == jnp.bfloat16
+
+
+def test_refresh_carries_decayed_weight(key):
+    """refresh_clustered_cache persists a float per-cluster weight across
+    flushes (decayed), independent of the capacity-saturating bcount."""
+    from repro.models import kmeans_attention as kma
+
+    b, kh, kc, cap, hd, r = 1, 2, 4, 8, 16, 8
+    k1, k2, k3 = jax.random.split(key, 3)
+    kcache = jax.random.normal(k1, (b, 64, kh, hd))
+    cache = kma.build_clustered_cache(kcache, kcache, kc=kc, capacity=cap,
+                                      iters=3)
+    cache.update(recent_k=jax.random.normal(k2, (b, kh, r, hd)),
+                 recent_v=jax.random.normal(k3, (b, kh, r, hd)),
+                 rlen=jnp.array(r, jnp.int32))
+    # all 64 prefill tokens are represented even though buckets cap at 8
+    np.testing.assert_allclose(float(jnp.sum(cache["cweight"])), 64 * kh)
+    out = kma.refresh_clustered_cache(cache, iters=1, decay=0.5)
+    # weight = 0.5 * old + R new tokens, per head
+    np.testing.assert_allclose(float(jnp.sum(out["cweight"])),
+                               (0.5 * 64 + r) * kh, rtol=1e-6)
+    assert int(out["rlen"]) == 0
+    assert float(jnp.sum(jnp.abs(out["recent_k"]))) == 0.0
+    # bcount stays a valid slot mask
+    assert int(out["bcount"].max()) <= cap
+
+    # half-full buffer: zero-padding slots beyond rlen are masked out of
+    # both the statistics and the bucket append
+    cache["rlen"] = jnp.array(r // 2, jnp.int32)
+    half = kma.refresh_clustered_cache(cache, iters=1, decay=0.5)
+    np.testing.assert_allclose(float(jnp.sum(half["cweight"])),
+                               (0.5 * 64 + r // 2) * kh, rtol=1e-6)
+    added = (half["bcount"].sum() - jnp.minimum(
+        cache["bcount"], cap).sum())
+    assert int(added) <= (r // 2) * kh  # only real tokens appended
+
+
+def test_engine_incremental_recluster(key):
+    """Serve-engine smoke: the recent buffer fills during decode and the
+    engine re-clusters via the warm-start partial_fit path (no refit)."""
+    from repro.configs.base import get_config
+    from repro.models import model as M
+    from repro.serve.engine import Engine, ServeConfig
+
+    cfg = get_config("starcoder2-3b").reduced()
+    params, _ = M.init_model(key, cfg)
+    eng = Engine(cfg, params, ServeConfig(max_seq=96, mode="clustered",
+                                          recent=4))
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (2, 48), 0,
+                                cfg.vocab_size)
+    out = eng.generate(tokens, 10)
+    assert out.shape == (2, 10)
+    assert bool(jnp.all(out >= 0))
+    assert eng.recluster_count == 2  # flushes at rlen=4, steps 4 and 8

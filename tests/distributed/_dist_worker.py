@@ -2,9 +2,11 @@
 
 Checks (each prints PASS/FAIL lines parsed by the pytest wrapper):
   1. distributed kmeans (2x4 mesh, N-sharded) == single-device kmeans
-  2. K-sharded (model-axis) kmeans == plain kmeans
-  3. compressed cross-pod reduction converges to ~the same inertia
-  4. sharded train_step == single-device train_step (grad equivalence)
+  2. fused FlashLloyd step distributed (step_impl="fused") == reference
+  3. K-sharded (model-axis) kmeans == plain kmeans (incl. with a fused
+     config, which transparently uses the stats-only sort-inverse pass)
+  4. compressed cross-pod reduction converges to ~the same inertia
+  5. sharded train_step == single-device train_step (grad equivalence)
 """
 import os
 
@@ -56,7 +58,18 @@ def main():
     check("n_sharded_inertia",
           abs(float(j_dist) - float(j_ref)) / float(j_ref) < 1e-5)
 
-    # --- 2. K-sharded (2-D kmeans) ----------------------------------------
+    # --- 2. fused FlashLloyd step, N-sharded -------------------------------
+    cfg_fused = KMeansConfig(k=k, max_iters=8, tol=-1.0, step_impl="fused")
+    fitf = make_distributed_kmeans(mesh, cfg_fused,
+                                   data_axes=("pod", "data"))
+    cf, af, jf = fitf(xs, c0r)
+    check("n_sharded_fused_centroids",
+          np.allclose(np.asarray(cf), np.asarray(c_ref), atol=1e-4),
+          f"max_err={np.abs(np.asarray(cf)-np.asarray(c_ref)).max():.2e}")
+    check("n_sharded_fused_inertia",
+          abs(float(jf) - float(j_ref)) / float(j_ref) < 1e-5)
+
+    # --- 3. K-sharded (2-D kmeans) ----------------------------------------
     mesh2 = jax.make_mesh((2, 4), ("data", "model"))
     fit2 = make_distributed_kmeans(mesh2, cfg, data_axes=("data",),
                                    k_axis="model")
@@ -67,14 +80,23 @@ def main():
           np.allclose(np.asarray(c2), np.asarray(c_ref), atol=1e-4),
           f"max_err={np.abs(np.asarray(c2)-np.asarray(c_ref)).max():.2e}")
 
-    # --- 3. compressed cross-pod EF reduction -----------------------------
+    # fused-configured cfg on the K-sharded path: stats-only pass falls
+    # back to sort-inverse — must not raise and must agree.
+    fit2f = make_distributed_kmeans(mesh2, cfg_fused, data_axes=("data",),
+                                    k_axis="model")
+    c2f, _, _ = fit2f(xs2, c02)
+    check("k_sharded_fused_cfg_centroids",
+          np.allclose(np.asarray(c2f), np.asarray(c_ref), atol=1e-4),
+          f"max_err={np.abs(np.asarray(c2f)-np.asarray(c_ref)).max():.2e}")
+
+    # --- 4. compressed cross-pod EF reduction -----------------------------
     fit3 = make_distributed_kmeans(mesh, cfg, data_axes=("pod", "data"),
                                    compress_pod_axis="pod")
     c3, _, j3 = fit3(xs, c0r)
     rel = abs(float(j3) - float(j_ref)) / float(j_ref)
     check("compressed_pod_inertia_close", rel < 0.02, f"rel={rel:.4f}")
 
-    # --- 4. sharded train step == single device ---------------------------
+    # --- 5. sharded train step == single device ---------------------------
     from repro.configs.base import get_config
     from repro.launch import specs as SP
     from repro.models import model as M

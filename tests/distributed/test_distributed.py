@@ -25,4 +25,4 @@ def test_distributed_equivalences():
     sys.stderr.write(r.stderr[-4000:])
     assert r.returncode == 0, "distributed worker failed"
     assert "FAIL" not in r.stdout
-    assert r.stdout.count("PASS") >= 6
+    assert r.stdout.count("PASS") >= 9
