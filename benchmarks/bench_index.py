@@ -1,0 +1,94 @@
+"""FlashIVF search workload — the perf trajectory of the index subsystem.
+
+Rows:
+- ``ivf_build_*``: wall time of ``IVFIndex.build`` (train + invert);
+  derived column reports points/s and the fitted posting-list capacity.
+- ``ivf_search_*``: per-query-batch wall time at increasing nprobe;
+  derived column reports recall@10 against the brute-force oracle and
+  the modeled TPU time of the two fused stages (probe + grouped scan).
+- ``ivf_add_*``: marginal wall cost of one online ``add`` batch +
+  ``refresh`` (assign + CSR append + O(K·d) re-center) vs the modeled
+  cost of refitting the whole index from scratch.
+
+Wall numbers are compiled-XLA CPU / interpret-mode Pallas (relative
+ordering only — see benchmarks/common.py); modeled numbers are the TPU
+roofline.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common as C
+from repro.core import heuristics
+from repro.index import IVFIndex, recall_at_k
+
+
+def _blobs(key, n, k, d, spread=5.0, noise=0.4):
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * spread
+    assign = jax.random.randint(ka, (n,), 0, k)
+    return centers[assign] + jax.random.normal(kn, (n, d)) * noise
+
+
+def rows() -> list[str]:
+    out = []
+    n, k, d, nq, topk = 20_000, 32, 32, 128, 10
+    x = _blobs(jax.random.PRNGKey(0), n, k, d)
+    q = x[jax.random.randint(jax.random.PRNGKey(1), (nq,), 0, n)]
+
+    # --- build throughput -------------------------------------------------
+    t0 = time.perf_counter()
+    index = IVFIndex.build(x, k=k, max_iters=8)
+    jax.block_until_ready(index.buckets)
+    us = (time.perf_counter() - t0) * 1e6
+    out.append(C.fmt_row(
+        f"ivf_build_N{n}_K{k}_d{d}", us,
+        f"pts_per_s={n / (us / 1e6):.0f};cap={index.cap}"))
+
+    # --- search QPS vs nprobe + recall@10 vs brute ------------------------
+    ids_ref, _ = index.search_brute(q, topk=topk)
+    for nprobe in (2, 8, k):
+        us = C.wall_us(
+            lambda qq, np_=nprobe: index.search(qq, topk=topk, nprobe=np_),
+            q, reps=3, warmup=1)
+        ids, _ = index.search(q, topk=topk, nprobe=nprobe)
+        cand = nprobe * index.cap
+        t_probe = C.modeled_time_s(
+            C.assign_flops(nq, k, d),
+            heuristics.probe_bytes_flash(nq, k, d, nprobe))
+        t_scan = C.modeled_time_s(
+            C.assign_flops(nq, cand, d),
+            (nq * cand * d + 2 * nq * topk) * 4.0)
+        out.append(C.fmt_row(
+            f"ivf_search_nprobe{nprobe}_B{nq}", us,
+            f"recall_at_{topk}={recall_at_k(ids, ids_ref):.3f};"
+            f"modeled_tpu_us={(t_probe + t_scan) * 1e6:.1f}"))
+
+    # --- online add marginal cost vs refit --------------------------------
+    r = 1024
+    x_new = _blobs(jax.random.PRNGKey(2), r, k, d)
+    t0 = time.perf_counter()
+    index.add(x_new)
+    index.refresh()
+    jax.block_until_ready(index.centroids)
+    us = (time.perf_counter() - t0) * 1e6
+    iters = 8
+    t_add = C.modeled_time_s(C.assign_flops(r, k, d),
+                             C.assign_bytes_flash(r, k, d))
+    t_refit = iters * C.modeled_time_s(
+        C.lloyd_flops_fused(n + r, k, d),
+        C.lloyd_bytes_fused(n + r, k, d))
+    out.append(C.fmt_row(
+        f"ivf_add_R{r}", us,
+        f"modeled_add_us={t_add * 1e6:.1f};"
+        f"modeled_refit_us={t_refit * 1e6:.1f};"
+        f"speedup={t_refit / t_add:.0f}x"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(rows()))

@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_e2e       -> paper Fig. 3 (end-to-end regimes)
   bench_outofcore -> paper §5.3 (billion-point streaming)
   bench_streaming -> online/mini-batch driver + incremental-vs-refit model
+  bench_index     -> FlashIVF search workload (build/QPS/recall/online add)
   bench_compile   -> paper Fig. 5 (time-to-first-run)
   roofline        -> dry-run roofline table (deliverable g)
 """
@@ -17,13 +18,15 @@ import traceback
 def main() -> None:
     print("name,us_per_call,derived")
     sections = []
-    from benchmarks import (bench_compile, bench_e2e, bench_kernels,
-                            bench_outofcore, bench_streaming, roofline)
+    from benchmarks import (bench_compile, bench_e2e, bench_index,
+                            bench_kernels, bench_outofcore, bench_streaming,
+                            roofline)
     sections = [
         ("kernels", bench_kernels.rows),
         ("e2e", bench_e2e.rows),
         ("outofcore", bench_outofcore.rows),
         ("streaming", bench_streaming.rows),
+        ("index", bench_index.rows),
         ("compile", bench_compile.rows),
         ("roofline", roofline.rows),
     ]

@@ -108,6 +108,67 @@ def fused_footprint(bn: int, bk: int, d: int, bytes_in: int,
     return x_tiles + c_res + acc + score + onehot + state
 
 
+def probe_footprint(bn: int, bk: int, l: int, d: int, bytes_in: int) -> int:
+    """VMEM bytes held live by one FlashProbe grid step.
+
+    Like FlashAssign but the running state is an L-best pool instead of a
+    scalar argmin, and each selection round materializes the merged
+    ``(B_N, L + B_K)`` candidate pool (f32 scores + i32 indices).
+    """
+    q_tile = bn * d * bytes_in          # resident across K sweep
+    c_tiles = 2 * bk * d * bytes_in     # double-buffered stream
+    score = bn * bk * 4                 # f32 intermediate
+    merged = bn * (l + bk) * (4 + 4)    # merged (vals, idxs) pool
+    state = bn * l * (4 + 4)            # running L-best scratch
+    out = bn * l * (4 + 4)
+    return q_tile + c_tiles + score + merged + state + out
+
+
+def scan_footprint(bb: int, bc: int, l: int, d: int, bytes_in: int) -> int:
+    """VMEM bytes held live by one grouped-probe (posting-list scan) grid
+    step: the candidate stream carries a per-query leading axis, so its
+    double-buffered tile costs ``2·B_B·B_C·d·b`` — the dominant term."""
+    q_tile = bb * d * bytes_in          # resident across C sweep
+    c_tiles = 2 * bb * bc * d * bytes_in  # double-buffered per-query stream
+    score = bb * bc * 4 * 2             # f32 score + csq intermediates
+    merged = bb * (l + bc) * (4 + 4)    # merged (vals, idxs) pool
+    state = bb * l * (4 + 4)
+    out = bb * l * (4 + 4)
+    return q_tile + c_tiles + score + merged + state + out
+
+
+def choose_scan_blocks(b: int, c: int, d: int, l: int, *,
+                       dtype_bytes: int = 4, hw: Hardware = TPU_V5E
+                       ) -> tuple[int, int]:
+    """Closed-form (block_b, block_c) for the grouped posting-list scan.
+
+    The candidate tile pays ``B_B·B_C·d`` bytes, so unlike the shared-
+    centroid kernels the two block dims compete directly for VMEM. Grid
+    steps number ``B·C / (B_B·B_C)`` while the per-byte selection work is
+    nearly tile-shape-independent (``~B·C·L`` for ``B_C >> L``), so the
+    right objective is simply the largest feasible tile *area*; ties go
+    to the wider candidate dim (longer sweep per selection state, and
+    the lane-aligned axis).
+    """
+    budget = int(hw.vmem_bytes * _VMEM_FRACTION)
+    l_pad = _round_up(max(1, l), hw.sublane)
+    b_lim = _round_up(b, hw.sublane)
+    c_lim = _round_up(c, hw.lane)
+    best = (hw.sublane, hw.lane)
+    bb_cands = tuple(hw.sublane * 2**i for i in range(4)) + _CANDIDATE_TILES
+    for bb in bb_cands:
+        if bb > b_lim:
+            continue
+        for bc in _CANDIDATE_TILES:
+            if bc > c_lim and bc > hw.lane:
+                continue
+            if scan_footprint(bb, bc, l_pad, d, dtype_bytes) > budget:
+                continue
+            if (bb * bc, bc) > (best[0] * best[1], best[1]):
+                best = (bb, bc)
+    return best
+
+
 # --- per-iteration HBM traffic models -------------------------------------
 # Single source of truth: the runtime crossover below and the benchmark
 # roofline tables (benchmarks/common.py) must never disagree.
@@ -173,6 +234,45 @@ def choose_step_impl(n: int, k: int, d: int, *, dtype_bytes: int = 4,
     t_update = max(2.0 * n * blk.update_block_k * d / peak,
                    update_bytes_sort_inverse(n, k, d, dtype_bytes) / bw)
     return "fused" if t_fused <= t_assign + t_update else "two_pass"
+
+
+def probe_bytes_flash(n: int, k: int, d: int, l: int, b: int = 4) -> float:
+    """FlashProbe HBM traffic: stream Q once, C once (per query-tile reuse
+    in VMEM), write the (N, L) index/distance pair. The N x K score matrix
+    never exists in HBM — the term a materialized top_k baseline pays
+    twice (write + re-read)."""
+    return (n * d + k * d) * b + 2 * n * l * 4
+
+
+def choose_probe_blocks(n: int, k: int, d: int, l: int, *,
+                        dtype_bytes: int = 4, hw: Hardware = TPU_V5E
+                        ) -> tuple[int, int]:
+    """Closed-form (block_n, block_k) for the FlashProbe kernel — the same
+    descent as ``choose_blocks``'s FlashAssign leg, with the L-best pool
+    charged to the working set. Every selection round sweeps the merged
+    ``(B_N, L + B_K)`` pool, so the per-tile selection cost grows as
+    ``L·(L + B_K)``: keep B_K moderate when L is large and give the query
+    tile the remaining budget (more reuse of the streamed centroid tile).
+    """
+    budget = int(hw.vmem_bytes * _VMEM_FRACTION)
+    l_pad = _round_up(max(1, l), hw.sublane)
+    # large L shifts the sweep from MXU matmul to VPU selection rounds;
+    # cap B_K so the merged pool stays within a few multiples of B_K.
+    bk_cap = 512 if l_pad <= 64 else 256
+    bk = _fit_minor(bk_cap, k, hw.lane)
+    bn = hw.sublane
+    for cand in _CANDIDATE_TILES:
+        if cand > _round_up(n, hw.sublane):
+            break
+        if probe_footprint(cand, bk, l_pad, d, dtype_bytes) <= budget:
+            bn = cand
+    while (probe_footprint(bn, bk, l_pad, d, dtype_bytes) > budget
+           and bk > hw.lane):
+        bk //= 2
+    while (probe_footprint(bn, bk, l_pad, d, dtype_bytes) > budget
+           and bn > hw.sublane):
+        bn //= 2
+    return bn, bk
 
 
 def choose_blocks(n: int, k: int, d: int, *, dtype_bytes: int = 4,

@@ -1,0 +1,12 @@
+"""repro.index — FlashIVF: online IVF vector search on flash-kmeans.
+
+Public API:
+  IVFIndex — coarse-quantized inverted-file index: ``build`` trains the
+  coarse centroids with the existing k-means drivers, ``search`` runs the
+  fused FlashProbe top-L kernel for both nprobe selection and the
+  posting-list scan, ``add``/``refresh`` keep the index online via the
+  shared ``SufficientStats`` reduction (no refits).
+"""
+from repro.index.ivf import IVFIndex, recall_at_k
+
+__all__ = ["IVFIndex", "recall_at_k"]

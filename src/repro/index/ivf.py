@@ -1,0 +1,327 @@
+"""FlashIVF — an online IVF (inverted-file) vector-search index built
+entirely from flash-kmeans primitives.
+
+The index is the canonical downstream consumer of k-means centroids
+(FAISS-style coarse quantization), and every stage maps onto a piece
+this repo already has:
+
+- **train**  — coarse centroids come from the existing drivers: the
+  in-core ``KMeans`` fit, or ``ChunkedKMeans`` when the corpus is an
+  out-of-core host array / chunk factory;
+- **invert** — posting lists are the *sort-inverse mapping itself*: one
+  stable ``argsort`` of the assignment vector is the concatenation of
+  all posting lists, and ``searchsorted`` of the sorted assignments
+  yields the CSR offsets — zero per-point scatters, the same dataflow
+  trick as ``kernels/sort_inverse_update.py`` (see DESIGN.md,
+  "FlashIVF dataflow");
+- **probe** — ``ops.flash_probe`` (fused distance + online top-L) picks
+  the ``nprobe`` nearest coarse cells per query, and its grouped variant
+  ``ops.flash_probe_grouped`` scans each query tile against its own
+  gathered candidate blocks — the score matrix never exists in HBM at
+  either stage;
+- **online** — ``add`` assigns new vectors with FlashAssign, appends
+  them to their lists in CSR batch order, and folds their sufficient
+  statistics into the running per-cluster ``SufficientStats``
+  (core.streaming); a periodic ``refresh`` commits the pending evidence
+  and re-centers the coarse centroids via the warm-start
+  ``finalize`` M-step — one O(K·d) reduction, never a refit.
+
+Storage layout: posting lists live in a capacity-padded bucket tensor
+``(K, cap, d)`` (the JIT-friendly equivalent of CSR — a fixed-shape
+gather target), with ``bucket_ids (K, cap)`` int32 (-1 padding) and
+``counts (K,)`` list lengths. Padded slots hold a large finite sentinel
+coordinate so their distances are astronomically large but never NaN/inf
+inside the kernel's crossterm — they can only surface when a query
+probes fewer valid candidates than ``topk``, in which case the returned
+id is an honest ``-1``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import heuristics
+from repro.core.chunked import ChunkedKMeans
+from repro.core.init import init_centroids
+from repro.core.kmeans import KMeans, KMeansConfig
+from repro.core.streaming import SufficientStats
+from repro.kernels import ops, ref
+
+Array = jax.Array
+
+# Padded-slot coordinate: large enough that a padded candidate can never
+# beat a real one, small enough that d * _PAD^2 stays finite in f32 for
+# any realistic d (no inf - inf = NaN risk in the crossterm score).
+_PAD_COORD = 1e15
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def csr_from_assignments(a: Array, k: int) -> tuple[Array, Array]:
+    """CSR posting lists from an assignment vector — the sort-inverse path.
+
+    ``order`` (N,) is the stable argsort of ``a``: the concatenation of
+    all posting lists (cluster-major, original order within a cluster).
+    ``offsets`` (K+1,) are the segment boundaries: list ``j`` is
+    ``order[offsets[j]:offsets[j+1]]``. The inverse mapping *is* the
+    index — no per-point scatter is ever issued.
+    """
+    order = jnp.argsort(a).astype(jnp.int32)
+    a_sorted = jnp.take(a, order)
+    offsets = jnp.searchsorted(a_sorted, jnp.arange(k + 1, dtype=a.dtype)
+                               ).astype(jnp.int32)
+    return order, offsets
+
+
+def recall_at_k(ids, ids_ref) -> float:
+    """Mean fraction of reference neighbours retrieved, per query.
+
+    ``ids``/``ids_ref``: (B, topk) id arrays (brute-force order as the
+    reference); unfilled ``-1`` slots count as misses. The one recall
+    definition shared by the serve launcher and the index benchmark.
+    """
+    ids, ids_ref = np.asarray(ids), np.asarray(ids_ref)
+    k = ids_ref.shape[1]
+    return float(np.mean([
+        len(set(a.tolist()) & set(b.tolist()) - {-1}) / k
+        for a, b in zip(ids, ids_ref)]))
+
+
+@functools.partial(jax.jit, static_argnames=("topk", "nprobe", "bqn", "bqk",
+                                             "bsb", "bsc", "interpret"))
+def _ivf_search(q: Array, centroids: Array, buckets: Array,
+                bucket_ids: Array, *, topk: int, nprobe: int, bqn: int,
+                bqk: int, bsb: int, bsc: int, interpret: bool | None
+                ) -> tuple[Array, Array]:
+    """Batched two-stage IVF search, fully fused (one jit per geometry).
+
+    Stage 1: FlashProbe over the coarse centroids -> (B, nprobe) cells.
+    Stage 2: gather the probed buckets and scan each query against its
+    own ``nprobe * cap`` candidate block with the grouped probe kernel
+    (query tiles, one launch for the whole batch).
+    """
+    b, d = q.shape
+    cap = buckets.shape[1]
+    probe, _ = ops.flash_probe(q, centroids.astype(q.dtype), l=nprobe,
+                               block_n=bqn, block_k=bqk,
+                               interpret=interpret, want_dists=False)
+    cand_x = buckets[probe].reshape(b, nprobe * cap, d)       # (B, C, d)
+    cand_ids = bucket_ids[probe].reshape(b, nprobe * cap)     # (B, C)
+    li, dist = ops.flash_probe_grouped(q, cand_x, l=topk,
+                                       block_b=bsb, block_c=bsc,
+                                       interpret=interpret)   # (B, topk)
+    ids = jnp.take_along_axis(cand_ids, li, axis=1)
+    return ids, dist
+
+
+class IVFIndex:
+    """Online IVF index: coarse k-means cells + CSR posting lists.
+
+    >>> index = IVFIndex.build(x, k=256, max_iters=10)
+    >>> ids, dists = index.search(q, topk=10, nprobe=16)
+    >>> index.add(x_new)                 # FlashAssign + list append
+    >>> index.refresh()                  # warm-start re-center, O(K d)
+    >>> ids_ref, _ = index.search_brute(q, topk=10)   # exactness oracle
+    """
+
+    def __init__(self, centroids: Array, capacity: int, *,
+                 interpret: bool | None = None):
+        k, d = centroids.shape
+        self.centroids = centroids
+        self.k, self.d = k, d
+        self.cap = max(8, _round_up(capacity, 8))
+        self.interpret = interpret
+        dt = centroids.dtype
+        self.buckets = jnp.full((k, self.cap, d), _PAD_COORD, dt)
+        self.bucket_ids = jnp.full((k, self.cap), -1, jnp.int32)
+        self.counts = jnp.zeros((k,), jnp.int32)
+        self.n_total = 0
+        # committed evidence (what the current centroids were refreshed
+        # from) and pending evidence (folded in by the next refresh)
+        self.stats = SufficientStats.zero(k, d)
+        self._pending = SufficientStats.zero(k, d)
+        self._blk = heuristics.choose_blocks(4096, k, d,
+                                             dtype_bytes=jnp.dtype(dt).itemsize)
+
+    # ------------------------------------------------------------------
+    # construction
+    # ------------------------------------------------------------------
+
+    @classmethod
+    def build(cls, x, k: int, *, max_iters: int = 10, init: str = "kmeans++",
+              tol: float = 0.0, step_impl: str = "auto",
+              capacity: int | None = None, chunk_size: int | None = None,
+              seed: int = 0, interpret: bool | None = None) -> "IVFIndex":
+        """Train coarse centroids and invert the corpus into posting lists.
+
+        ``x``: (N, d) array — or, with ``chunk_size`` set, a host numpy
+        array / chunk factory handled out-of-core by ``ChunkedKMeans``
+        (training *and* inversion then stream in chunks; device memory
+        stays O(chunk + K·cap·d)).
+        """
+        cfg = KMeansConfig(k=k, max_iters=max_iters, init=init, tol=tol,
+                           step_impl=step_impl, interpret=interpret)
+        key = jax.random.PRNGKey(seed)
+        if chunk_size is None:
+            xj = jnp.asarray(x)
+            centroids = KMeans(cfg).fit(key, xj).centroids
+            a, m = ops.flash_assign(xj, centroids.astype(xj.dtype),
+                                    interpret=interpret)
+            cap = capacity if capacity is not None else int(
+                jnp.max(jnp.bincount(a, length=k)))
+            index = cls(centroids, cap, interpret=interpret)
+            index._fold(xj, a, m)
+        else:
+            # out-of-core: ChunkedKMeans trains (init from the first
+            # chunk), then the same chunk stream is inverted via add().
+            driver = ChunkedKMeans(cfg, chunk_size=chunk_size)
+            first = next(driver._chunks(x))
+            c0 = init_centroids(key, jnp.asarray(first), k, init)
+            centroids, _ = driver.fit(x, c0)
+            index = cls(centroids, capacity if capacity is not None else 8,
+                        interpret=interpret)
+            for chunk in driver._chunks(x):
+                index.add(chunk)
+        # build-time evidence is the committed baseline, not drift:
+        # start refresh() semantics from a clean pending slate
+        index.stats = index.stats.merge(index._pending)
+        index._pending = SufficientStats.zero(k, index.d)
+        return index
+
+    # ------------------------------------------------------------------
+    # online mutation
+    # ------------------------------------------------------------------
+
+    def add(self, x_new) -> Array:
+        """Assign, append, and account new vectors. Returns their cells.
+
+        One FlashAssign pass gives the coarse cells; the batch is then
+        CSR-ordered (stable argsort + segment offsets) so the bucket
+        write is a disjoint vectorized scatter — and the batch sufficient
+        statistics are folded into the pending ``SufficientStats`` so the
+        next ``refresh`` can re-center without touching the points again.
+        """
+        x_new = jnp.asarray(x_new, self.buckets.dtype)
+        if x_new.shape[0] == 0:
+            return jnp.zeros((0,), jnp.int32)
+        a, m = ops.flash_assign(x_new, self.centroids.astype(x_new.dtype),
+                                block_n=self._blk.assign_block_n,
+                                block_k=self._blk.assign_block_k,
+                                interpret=self.interpret)
+        self._fold(x_new, a, m)
+        return a
+
+    def _fold(self, x: Array, a: Array, m: Array) -> None:
+        """Append a pre-assigned batch and account its statistics."""
+        s, cnt = ops.centroid_stats(
+            x, a, k=self.k, block_n=self._blk.update_block_n,
+            block_k=self._blk.update_block_k, interpret=self.interpret)
+        self._pending = self._pending.merge(
+            SufficientStats(s, cnt, jnp.sum(m)))
+        self._append(x, a)
+
+    def refresh(self, decay: float = 1.0) -> "IVFIndex":
+        """Commit pending evidence and re-center the coarse centroids.
+
+        The warm-start ``partial_fit`` contract with the assignment pass
+        hoisted into ``add``: pending batch statistics were computed at
+        assignment time, so the commit is one O(K·d) merge + M-step —
+        no pass over any stored vector. ``decay < 1`` exponentially
+        down-weights old evidence (drifting corpora).
+        """
+        self.stats = self.stats.scale(decay).merge(self._pending)
+        self._pending = SufficientStats.zero(self.k, self.d)
+        self.centroids = self.stats.finalize(self.centroids)
+        return self
+
+    def _append(self, x: Array, a: Array) -> None:
+        """Append a batch in CSR order (sort-inverse, no per-point logic)."""
+        n = x.shape[0]
+        if n == 0:
+            return
+        order, offsets = csr_from_assignments(a, self.k)
+        a_sorted = jnp.take(a, order)
+        rank = jnp.arange(n, dtype=jnp.int32) - jnp.take(offsets, a_sorted)
+        slot = jnp.take(self.counts, a_sorted) + rank
+        needed = int(jnp.max(slot)) + 1
+        if needed > self.cap:
+            self._grow(needed)
+        ids_new = (self.n_total + order).astype(jnp.int32)
+        self.buckets = self.buckets.at[a_sorted, slot].set(
+            jnp.take(x, order, axis=0).astype(self.buckets.dtype))
+        self.bucket_ids = self.bucket_ids.at[a_sorted, slot].set(ids_new)
+        self.counts = self.counts + jnp.bincount(
+            a, length=self.k).astype(jnp.int32)
+        self.n_total += n
+
+    def _grow(self, needed: int) -> None:
+        """Grow posting-list capacity (amortized doubling, host-side)."""
+        new_cap = max(_round_up(needed, 8), 2 * self.cap)
+        pad = new_cap - self.cap
+        self.buckets = jnp.pad(self.buckets, ((0, 0), (0, pad), (0, 0)),
+                               constant_values=_PAD_COORD)
+        self.bucket_ids = jnp.pad(self.bucket_ids, ((0, 0), (0, pad)),
+                                  constant_values=-1)
+        self.cap = new_cap
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+
+    def search(self, q, topk: int = 10, nprobe: int = 8
+               ) -> tuple[Array, Array]:
+        """Batched top-k search. q: (B, d) -> (ids (B, topk) int32,
+        sq_dists f32 (B, topk)), ascending; ids of unfilled slots are -1.
+
+        ``nprobe = k`` probes every cell: the result is exactly the
+        brute-force top-k over all indexed vectors.
+        """
+        q = jnp.asarray(q, self.buckets.dtype)
+        nprobe = min(nprobe, self.k)
+        cand = nprobe * self.cap
+        if topk > cand:
+            raise ValueError(
+                f"topk={topk} exceeds the probed candidate pool "
+                f"nprobe*cap={cand}; raise nprobe or capacity")
+        bqn, bqk = heuristics.choose_probe_blocks(q.shape[0], self.k,
+                                                  self.d, nprobe)
+        bsb, bsc = heuristics.choose_scan_blocks(q.shape[0], cand, self.d,
+                                                 topk)
+        return _ivf_search(q, self.centroids, self.buckets, self.bucket_ids,
+                           topk=topk, nprobe=nprobe, bqn=bqn, bqk=bqk,
+                           bsb=bsb, bsc=bsc, interpret=self.interpret)
+
+    def search_brute(self, q, topk: int = 10) -> tuple[Array, Array]:
+        """Dense brute-force reference over every indexed vector (the
+        exactness/recall oracle — materializes the full score matrix)."""
+        q = jnp.asarray(q, self.buckets.dtype)
+        flat_x = self.buckets.reshape(self.k * self.cap, self.d)
+        flat_ids = self.bucket_ids.reshape(self.k * self.cap)
+        idx, dists = ref.probe_ref(q, flat_x, topk)
+        return jnp.take(flat_ids, idx), dists
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+
+    def posting_lists(self) -> tuple[Array, Array]:
+        """The CSR view ``(ids, offsets)``: list ``j`` is
+        ``ids[offsets[j]:offsets[j+1]]`` (insertion order preserved)."""
+        valid = (jax.lax.broadcasted_iota(jnp.int32, self.bucket_ids.shape, 1)
+                 < self.counts[:, None])
+        ids = self.bucket_ids[valid]          # row-major == cluster-major
+        offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                   jnp.cumsum(self.counts)]).astype(jnp.int32)
+        return ids, offsets
+
+    def __len__(self) -> int:
+        return self.n_total
+
+    def __repr__(self) -> str:
+        return (f"IVFIndex(k={self.k}, d={self.d}, n={self.n_total}, "
+                f"cap={self.cap})")

@@ -1,0 +1,229 @@
+"""FlashProbe — fused distance + online top-L (Pallas TPU).
+
+FlashAssign generalized from the online *argmin* to an online *L-best*
+selection: the IVF search primitive. Two call sites in the index
+subsystem share this one kernel:
+
+- **nprobe centroid selection** — queries against the (K, d) coarse
+  centroid set, L = nprobe;
+- **batched posting-list scan** — the grouped variant below: query
+  tiles, each query scored against its own gathered (nprobe·cap, d)
+  candidate block, L = topk.
+
+Structure mirrors FlashAssign: grid ``(Q_tiles, K_tiles)`` with K
+minor-most, so the running ``(vals, idxs)`` L-best state lives in VMEM
+scratch and persists across the K sweep for a fixed query tile. The
+``N x K`` score matrix never exists in HBM — per-sweep IO is
+``O(Q d + K d)`` reads + ``O(Q L)`` writes.
+
+Per grid step the tile's ``(B_Q, B_K)`` crossterm scores are concatenated
+with the running L-best pool and reduced by L rounds of (min, argmin,
+mask) — a static selection network, unrolled at trace time (L is small:
+nprobe or topk). Tie-breaking matches ``jax.lax.top_k``: for equal
+scores the lower centroid index wins, because
+
+- within a tile, ``jnp.argmin`` picks the first occurrence (lowest index);
+- K tiles are swept in ascending index order and the running pool is
+  stored *before* the new tile's scores in the merged candidate row, so
+  an earlier (lower-index) winner is re-selected ahead of an equal
+  newcomer;
+- the running pool itself is kept sorted by (score, index) — the
+  invariant each selection round preserves.
+
+The kernel keeps the x-norm-free score ``||c||^2 - 2 q.c`` (the per-query
+constant ``||q||^2`` cannot change the selection); the wrapper re-adds it
+when true squared distances are requested. K-padding is masked in-kernel
+with ``+inf`` so padded centroids can never be selected.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_INF = float("inf")
+
+
+def _select_l_best(mv: Array, mi: Array, l: int) -> tuple[Array, Array]:
+    """L rounds of (min, argmin, mask) over the merged candidate pool.
+
+    mv/mi: (bq, P) merged scores / global indices. Returns the L smallest
+    scores per row in ascending (score, index) order. ``take_along_axis``
+    is avoided (Mosaic-unfriendly gather); the selected index is extracted
+    with a one-hot reduction instead.
+    """
+    cols = jax.lax.broadcasted_iota(jnp.int32, mv.shape, 1)
+    vals, idxs = [], []
+    for _ in range(l):
+        m = jnp.min(mv, axis=1)
+        am = jnp.argmin(mv, axis=1).astype(jnp.int32)
+        sel = cols == am[:, None]
+        idx = jnp.sum(jnp.where(sel, mi, 0), axis=1)
+        vals.append(m)
+        idxs.append(idx)
+        mv = jnp.where(sel, _INF, mv)
+    return jnp.stack(vals, axis=1), jnp.stack(idxs, axis=1)
+
+
+def _flash_probe_kernel(q_ref, c_ref, i_ref, v_ref, v_scr, i_scr, *,
+                        block_k: int, k_actual: int, l: int):
+    """One (query-tile, centroid-tile) grid step."""
+    kt = pl.program_id(1)
+    nk = pl.num_programs(1)
+
+    @pl.when(kt == 0)
+    def _init():
+        v_scr[...] = jnp.full_like(v_scr[...], _INF)
+        i_scr[...] = jnp.zeros_like(i_scr[...])
+
+    q = q_ref[...]                                   # (bq, d)
+    c = c_ref[...]                                   # (bk, d)
+
+    # MXU: cross term with f32 accumulation (FlashAssign math).
+    cross = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    csq = jnp.sum(c.astype(jnp.float32) * c.astype(jnp.float32), axis=-1)
+    score = csq[None, :] - 2.0 * cross               # (bq, bk) f32
+
+    # Mask padded centroids (tail tile only).
+    k_ids = kt * block_k + jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
+    score = jnp.where(k_ids < k_actual, score, _INF)
+
+    # Merge: running L-best first (earlier tiles = lower indices), then
+    # this tile's candidates — first-occurrence argmin gives top_k ties.
+    mv = jnp.concatenate([v_scr[...], score], axis=1)   # (bq, l + bk)
+    mi = jnp.concatenate([i_scr[...], k_ids], axis=1)
+    new_v, new_i = _select_l_best(mv, mi, l)
+    v_scr[...] = new_v
+    i_scr[...] = new_i
+
+    @pl.when(kt == nk - 1)
+    def _flush():
+        i_ref[...] = i_scr[...]
+        v_ref[...] = v_scr[...]
+
+
+def _flash_probe_grouped_kernel(q_ref, c_ref, i_ref, v_ref, v_scr, i_scr, *,
+                                block_c: int, c_actual: int, l: int):
+    """One (query-tile, candidate-tile) grid step, per-query candidates.
+
+    Unlike the shared-centroid kernel, each query row scores its *own*
+    candidate slice (``c_ref`` carries a leading query axis), so the
+    cross term is a VPU mul-reduce over d instead of an MXU matmul —
+    the honest dataflow of an IVF posting-list scan, where no two
+    queries share a candidate set. Selection state and tie-breaking are
+    identical to the shared kernel.
+    """
+    ct = pl.program_id(1)
+    nc = pl.num_programs(1)
+
+    @pl.when(ct == 0)
+    def _init():
+        v_scr[...] = jnp.full_like(v_scr[...], _INF)
+        i_scr[...] = jnp.zeros_like(i_scr[...])
+
+    q = q_ref[...].astype(jnp.float32)               # (bq, d)
+    c = c_ref[...].astype(jnp.float32)               # (bq, bc, d)
+
+    cross = jnp.sum(q[:, None, :] * c, axis=-1)      # (bq, bc) f32
+    csq = jnp.sum(c * c, axis=-1)                    # (bq, bc) f32
+    score = csq - 2.0 * cross
+
+    c_ids = ct * block_c + jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
+    score = jnp.where(c_ids < c_actual, score, _INF)
+
+    mv = jnp.concatenate([v_scr[...], score], axis=1)
+    mi = jnp.concatenate([i_scr[...], c_ids], axis=1)
+    new_v, new_i = _select_l_best(mv, mi, l)
+    v_scr[...] = new_v
+    i_scr[...] = new_i
+
+    @pl.when(ct == nc - 1)
+    def _flush():
+        i_ref[...] = i_scr[...]
+        v_ref[...] = v_scr[...]
+
+
+def flash_probe_grouped_raw(q: Array, c: Array, *, l: int, block_b: int,
+                            block_c: int, c_actual: int,
+                            interpret: bool = False) -> tuple[Array, Array]:
+    """Pallas call on pre-padded inputs (the posting-list scan).
+
+    q: (B_pad, d), c: (B_pad, C_pad, d) with B_pad % block_b == C_pad %
+    block_c == 0 and ``l <= c_actual``. Returns ``(indices int32
+    (B_pad, l), scores f32 (B_pad, l))`` — indices are positions into
+    each query's own candidate axis.
+    """
+    b_pad, d = q.shape
+    c_pad = c.shape[1]
+    grid = (b_pad // block_b, c_pad // block_c)
+
+    kernel = functools.partial(
+        _flash_probe_grouped_kernel, block_c=block_c, c_actual=c_actual, l=l)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, d), lambda i, c: (i, 0)),
+            pl.BlockSpec((block_b, block_c, d), lambda i, c: (i, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, l), lambda i, c: (i, 0)),
+            pl.BlockSpec((block_b, l), lambda i, c: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, l), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad, l), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, l), jnp.float32),
+            pltpu.VMEM((block_b, l), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, c)
+
+
+def flash_probe_raw(q: Array, c: Array, *, l: int, block_n: int,
+                    block_k: int, k_actual: int, interpret: bool = False
+                    ) -> tuple[Array, Array]:
+    """Pallas call on pre-padded inputs.
+
+    q: (N_pad, d), c: (K_pad, d) with N_pad % block_n == K_pad % block_k
+    == 0 and ``l <= k_actual``. Returns ``(indices int32 (N_pad, l),
+    scores f32 (N_pad, l))`` sorted ascending per row, where score is
+    ``||c||^2 - 2 q.c`` (add ``||q||^2`` for the true squared distance).
+    """
+    n_pad, d = q.shape
+    k_pad = c.shape[0]
+    grid = (n_pad // block_n, k_pad // block_k)
+
+    kernel = functools.partial(
+        _flash_probe_kernel, block_k=block_k, k_actual=k_actual, l=l)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i, k: (i, 0)),
+            pl.BlockSpec((block_k, d), lambda i, k: (k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n, l), lambda i, k: (i, 0)),
+            pl.BlockSpec((block_n, l), lambda i, k: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pad, l), jnp.int32),
+            jax.ShapeDtypeStruct((n_pad, l), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_n, l), jnp.float32),
+            pltpu.VMEM((block_n, l), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q, c)

@@ -17,6 +17,7 @@ import jax.numpy as jnp
 
 from repro.kernels import flash_assign as _fa
 from repro.kernels import flash_lloyd as _fl
+from repro.kernels import flash_probe as _fp
 from repro.kernels import ref as _ref
 from repro.kernels import sort_inverse_update as _siu
 
@@ -178,6 +179,89 @@ def flash_lloyd_step(x: Array, c: Array, *, block_n: int = 256,
         xp, cp, block_n=block_n, block_k=block_k, k_actual=k, n_actual=n,
         interpret=interpret)
     return a[:n], s[:k], cnt[:k], j[0, 0]
+
+
+# ---------------------------------------------------------------------------
+# FlashProbe — fused distance + online top-L (IVF search primitive)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("l", "block_n", "block_k",
+                                             "interpret", "want_dists"))
+def flash_probe(q: Array, c: Array, *, l: int, block_n: int = 256,
+                block_k: int = 256, interpret: bool | None = None,
+                want_dists: bool = True) -> tuple[Array, Array]:
+    """Fused L-nearest-centroid probe. q: (N, d), c: (K, d), ``l <= K``.
+
+    Returns ``(indices int32 (N, l), dists f32 (N, l))`` sorted ascending
+    by distance; ties broken toward the lower index (``jax.lax.top_k``
+    parity). Distances are true squared Euclidean distances unless
+    ``want_dists=False`` (then the ``||q||^2``-free score is returned).
+
+    ``l`` is padded up to a sublane multiple internally (the kernel's
+    running-state minor dim); the extra slots hold the (l+1)-th..best
+    candidates and are sliced off — a superset, never a different answer.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    n, d = q.shape
+    k = c.shape[0]
+    if l > k:
+        raise ValueError(f"flash_probe needs l <= K, got l={l} > K={k}")
+    if l < 1:
+        raise ValueError(f"flash_probe needs l >= 1, got l={l}")
+    l_pad = _round_up(l, 8)
+    block_n = min(block_n, _round_up(n, 8))
+    block_k = min(block_k, _round_up(k, 8))
+    qp = _pad_to(q, block_n, 0, 0)
+    cp = _pad_to(c, block_k, 0, 0)
+    idx, v = _fp.flash_probe_raw(qp, cp, l=l_pad, block_n=block_n,
+                                 block_k=block_k, k_actual=k,
+                                 interpret=interpret)
+    idx, v = idx[:n, :l], v[:n, :l]
+    if want_dists:
+        q32 = q.astype(jnp.float32)
+        v = v + jnp.sum(q32 * q32, axis=-1, keepdims=True)
+        v = jnp.maximum(v, 0.0)  # clamp tiny negative fp residue
+    return idx, v
+
+
+@functools.partial(jax.jit, static_argnames=("l", "block_b", "block_c",
+                                             "interpret", "want_dists"))
+def flash_probe_grouped(q: Array, c: Array, *, l: int, block_b: int = 128,
+                        block_c: int = 256, interpret: bool | None = None,
+                        want_dists: bool = True) -> tuple[Array, Array]:
+    """Per-query-candidate top-L scan. q: (B, d), c: (B, C, d).
+
+    The IVF posting-list scan: query ``i`` is scored against its own
+    gathered candidate block ``c[i]`` (C = nprobe·cap rows), one query
+    *tile* per grid step — a single kernel launch for the whole batch,
+    no ``B x C`` score matrix in HBM. Returns ``(indices int32 (B, l),
+    dists f32 (B, l))`` ascending; indices address each query's own
+    candidate axis.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, d = q.shape
+    c_n = c.shape[1]
+    if l > c_n:
+        raise ValueError(f"flash_probe_grouped needs l <= C, got l={l} "
+                         f"> C={c_n}")
+    if l < 1:
+        raise ValueError(f"flash_probe_grouped needs l >= 1, got l={l}")
+    l_pad = _round_up(l, 8)
+    block_b = min(block_b, _round_up(b, 8))
+    block_c = min(block_c, _round_up(c_n, 8))
+    qp = _pad_to(q, block_b, 0, 0)
+    cp = _pad_to(_pad_to(c, block_b, 0, 0), block_c, 1, 0)
+    idx, v = _fp.flash_probe_grouped_raw(
+        qp, cp, l=l_pad, block_b=block_b, block_c=block_c, c_actual=c_n,
+        interpret=interpret)
+    idx, v = idx[:b, :l], v[:b, :l]
+    if want_dists:
+        q32 = q.astype(jnp.float32)
+        v = v + jnp.sum(q32 * q32, axis=-1, keepdims=True)
+        v = jnp.maximum(v, 0.0)
+    return idx, v
 
 
 # ---------------------------------------------------------------------------

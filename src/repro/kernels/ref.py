@@ -66,6 +66,32 @@ def assign_ref_crossterm(x: Array, c: Array) -> tuple[Array, Array]:
     return a, m
 
 
+def probe_ref(q: Array, c: Array, l: int, *, want_dists: bool = True
+              ) -> tuple[Array, Array]:
+    """Dense top-L oracle for the FlashProbe kernel.
+
+    Materializes the full score matrix in the kernel's own form
+    (``||c||^2 - 2 q.c``, per-query constant dropped) and reduces it with
+    ``jax.lax.top_k`` — so ``want_dists=False`` values are bitwise
+    comparable with the fused kernel and ties break identically (lower
+    index first). Returns ``(indices int32 (N, l), values f32 (N, l))``
+    ascending; with ``want_dists=True`` the per-query ``||q||^2`` is
+    re-added like ``ops.flash_probe`` (bitwise parity ends here: the
+    re-add happens in two different XLA graphs).
+    """
+    c32 = c.astype(jnp.float32)
+    csq = jnp.sum(c32 * c32, axis=-1)
+    cross = jax.lax.dot_general(
+        q, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32)
+    score = csq[None, :] - 2.0 * cross
+    neg_v, idx = jax.lax.top_k(-score, l)
+    if not want_dists:
+        return idx.astype(jnp.int32), -neg_v
+    q32 = q.astype(jnp.float32)
+    d = -neg_v + jnp.sum(q32 * q32, axis=-1, keepdims=True)
+    return idx.astype(jnp.int32), jnp.maximum(d, 0.0)
+
+
 def update_scatter_ref(x: Array, a: Array, k: int) -> tuple[Array, Array]:
     """Scatter-style centroid statistics (the contention-prone baseline).
 

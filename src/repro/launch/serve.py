@@ -1,7 +1,11 @@
-"""Serving launcher: batched prefill+decode with optional clustered-KV.
+"""Serving launcher: batched prefill+decode with optional clustered-KV,
+plus a FlashIVF vector-search serving mode.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --reduced \
       --batch 4 --prompt-len 128 --gen 32 --mode clustered
+
+  PYTHONPATH=src python -m repro.launch.serve --mode search \
+      --n 20000 --d 64 --kc 64 --queries 512 --topk 10 --nprobe 8
 """
 from __future__ import annotations
 
@@ -9,25 +13,13 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import get_config
 from repro.models import model as M
-from repro.serve.engine import Engine, ServeConfig
+from repro.serve.engine import Engine, SearchConfig, SearchEngine, ServeConfig
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=128)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--mode", default="dense", choices=["dense", "clustered"])
-    ap.add_argument("--temperature", type=float, default=0.0)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
-
+def _serve_lm(args) -> None:
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -56,6 +48,74 @@ def main() -> None:
           f"prompt={args.prompt_len} gen={args.gen}")
     print(f"wall {dt:.2f}s -> {args.batch*args.gen/dt:.1f} tok/s")
     print("sample ids:", out[0, :16].tolist())
+
+
+def _serve_search(args) -> None:
+    """Build a FlashIVF index over a synthetic clustered corpus and serve
+    batched queries; reports build wall, QPS, and recall@topk vs brute."""
+    from repro.index import IVFIndex, recall_at_k
+
+    key = jax.random.PRNGKey(args.seed)
+    kc, ka, kn, kq = jax.random.split(key, 4)
+    centers = jax.random.normal(kc, (args.kc, args.d)) * 5.0
+    lbl = jax.random.randint(ka, (args.n,), 0, args.kc)
+    x = centers[lbl] + 0.4 * jax.random.normal(kn, (args.n, args.d))
+
+    t0 = time.time()
+    index = IVFIndex.build(x, k=args.kc, max_iters=args.kmeans_iters)
+    jax.block_until_ready(index.buckets)
+    t_build = time.time() - t0
+
+    scfg = SearchConfig(topk=args.topk, nprobe=args.nprobe,
+                        query_batch=args.queries)
+    eng = SearchEngine(index, scfg)
+    q = x[jax.random.randint(kq, (args.queries,), 0, args.n)]
+    ids, _ = eng.search(q)                     # compile + warm
+    jax.block_until_ready(ids)
+    t0 = time.time()
+    for _ in range(args.reps):
+        ids, dists = eng.search(q)
+    jax.block_until_ready(ids)
+    qps = args.reps * args.queries / (time.time() - t0)
+
+    ids_ref, _ = index.search_brute(q, topk=args.topk)
+    recall = recall_at_k(ids, ids_ref)
+    print(f"mode=search n={args.n} d={args.d} kc={args.kc} "
+          f"nprobe={args.nprobe} topk={args.topk}")
+    print(f"build {t_build:.2f}s ({args.n / t_build:.0f} pts/s); "
+          f"serve {qps:.0f} qps; recall@{args.topk}={recall:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="dense",
+                    choices=["dense", "clustered", "search"])
+    # LM serving
+    ap.add_argument("--arch")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=128)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    # vector-search serving
+    ap.add_argument("--n", type=int, default=20_000)
+    ap.add_argument("--d", type=int, default=64)
+    ap.add_argument("--kc", type=int, default=64,
+                    help="coarse cells (IVF k)")
+    ap.add_argument("--queries", type=int, default=256)
+    ap.add_argument("--topk", type=int, default=10)
+    ap.add_argument("--nprobe", type=int, default=8)
+    ap.add_argument("--kmeans-iters", type=int, default=8)
+    ap.add_argument("--reps", type=int, default=4)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.mode == "search":
+        _serve_search(args)
+        return
+    if not args.arch:
+        ap.error("--arch is required for dense/clustered serving")
+    _serve_lm(args)
 
 
 if __name__ == "__main__":

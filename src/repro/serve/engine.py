@@ -1,7 +1,7 @@
-"""Batched serving engine: prefill + greedy/temperature decode, with an
-optional flash-kmeans clustered-KV mode for long contexts.
+"""Batched serving engines.
 
-In clustered mode the engine:
+``Engine`` — prefill + greedy/temperature decode, with an optional
+flash-kmeans clustered-KV mode for long contexts. In clustered mode:
   1. runs dense prefill,
   2. clusters each layer's cached keys with flash-kmeans and rebuilds the
      cache in bucketed (sort-inverse) layout,
@@ -11,6 +11,12 @@ In clustered mode the engine:
      just the new keys — bucket statistics are carried forward as
      ``SufficientStats``, never refit from scratch — then the tokens are
      appended to their assigned buckets and the buffer resets.
+
+``SearchEngine`` — batched vector search (query -> top-k ids) over a
+FlashIVF index (repro.index), the online-retrieval analogue of the
+clustered-KV flush schedule: inserts accumulate as pending
+``SufficientStats`` and the coarse centroids are re-centered by a
+periodic ``refresh`` instead of a refit.
 """
 from __future__ import annotations
 
@@ -145,3 +151,64 @@ class Engine:
         k = jax.random.fold_in(key, i)
         return jax.random.categorical(
             k, logits / self.scfg.temperature)[:, None].astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Vector-search serving (FlashIVF)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class SearchConfig:
+    topk: int = 10
+    nprobe: int = 8
+    query_batch: int = 256    # queries are padded to this (jit-cache shape)
+    refresh_every: int = 8    # add() batches between automatic refreshes
+    refresh_decay: float = 1.0
+
+
+class SearchEngine:
+    """Batched query -> top-k serving over a built ``IVFIndex``.
+
+    Queries are padded to a fixed batch shape so heavy traffic reuses one
+    jitted search executable per index geometry; inserts follow the same
+    incremental contract as the clustered-KV cache — ``add`` assigns and
+    appends, and every ``refresh_every``-th batch triggers a warm-start
+    ``refresh`` (statistics merge + M-step, never a refit). The flush
+    schedule is a host counter, mirroring ``Engine.generate``'s
+    deterministic clustered-mode flushes.
+    """
+
+    def __init__(self, index, scfg: SearchConfig | None = None):
+        self.index = index
+        self.scfg = scfg or SearchConfig()
+        self.queries_served = 0
+        self.adds_since_refresh = 0
+        self.refresh_count = 0
+
+    def search(self, q: Array) -> tuple[Array, Array]:
+        """q: (B, d), any B <= query_batch -> (ids (B, topk), dists)."""
+        q = jnp.asarray(q)
+        b = q.shape[0]
+        qb = self.scfg.query_batch
+        if b > qb:
+            raise ValueError(f"query batch {b} exceeds query_batch={qb}; "
+                             "split the request or raise the config")
+        if b < qb:
+            q = jnp.pad(q, ((0, qb - b), (0, 0)))
+        ids, dists = self.index.search(q, topk=self.scfg.topk,
+                                       nprobe=self.scfg.nprobe)
+        self.queries_served += b
+        return ids[:b], dists[:b]
+
+    def add(self, x_new: Array) -> Array:
+        """Online insert; auto-refreshes on the host-side flush schedule."""
+        a = self.index.add(x_new)
+        self.adds_since_refresh += 1
+        if self.adds_since_refresh >= self.scfg.refresh_every:
+            self.refresh()
+        return a
+
+    def refresh(self) -> None:
+        self.index.refresh(decay=self.scfg.refresh_decay)
+        self.adds_since_refresh = 0
+        self.refresh_count += 1

@@ -1,0 +1,44 @@
+"""Exhaustive autotuner smoke test (tiny shape, CPU interpret mode):
+the report must be well-formed and ``best`` a valid, budget-feasible
+candidate drawn from the measured table."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import autotune, heuristics
+
+
+def test_exhaustive_tune_tiny_shape():
+    n, k, d = 256, 8, 16
+    rep = autotune.exhaustive_tune(n, k, d)
+    # well-formed telemetry
+    assert rep.num_compiles == len(rep.table) > 0
+    assert rep.tune_seconds > 0
+    assert np.isfinite(rep.best_assign_us) and rep.best_assign_us > 0
+    assert np.isfinite(rep.best_update_us) and rep.best_update_us > 0
+    # every table entry is a positive timing for a known kernel kind
+    kinds = {kind for kind, _, _ in rep.table}
+    assert kinds <= {"assign", "update"}
+    assert all(us > 0 for us in rep.table.values())
+    # best is a valid candidate: measured, the table minimum of its kind,
+    # and within the VMEM budget the tuner enforced
+    blk = rep.best.validate()
+    a_key = ("assign", blk.assign_block_n, blk.assign_block_k)
+    u_key = ("update", blk.update_block_n, blk.update_block_k)
+    assert a_key in rep.table and u_key in rep.table
+    assert rep.table[a_key] == min(
+        us for (kind, _, _), us in rep.table.items() if kind == "assign")
+    assert rep.table[u_key] == min(
+        us for (kind, _, _), us in rep.table.items() if kind == "update")
+    budget = int(heuristics.TPU_V5E.vmem_bytes * 0.7)
+    itemsize = jnp.dtype(jnp.float32).itemsize
+    assert heuristics.assign_footprint(
+        blk.assign_block_n, blk.assign_block_k, d, itemsize) <= budget
+    assert heuristics.update_footprint(
+        blk.update_block_n, blk.update_block_k, d, itemsize) <= budget
+
+
+def test_heuristic_tune_is_cheap():
+    rep = autotune.heuristic_tune(4096, 64, 32)
+    assert rep.num_compiles == 2
+    assert rep.table == {}
+    rep.best.validate()

@@ -1,0 +1,222 @@
+"""FlashIVF acceptance tests: full-probe exactness vs brute force,
+recall at partial probing, online add/refresh behaviour, CSR posting-list
+structure, the fused top-L kernel vs jax.lax.top_k, and the search
+serving engine (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.streaming import SufficientStats
+from repro.index import IVFIndex
+from repro.index.ivf import csr_from_assignments
+from repro.kernels import ops, ref
+
+
+def _blobs(key, n, k, d, spread=6.0, noise=0.3):
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * spread
+    assign = jax.random.randint(ka, (n,), 0, k)
+    x = centers[assign] + jax.random.normal(kn, (n, d)) * noise
+    return x, centers
+
+
+def assert_topk_match(ids, dists, ids_ref, dists_ref, tol=1e-3):
+    """Result lists may differ only by swaps of numerical near-ties:
+    every position must either agree on the id or sit inside a run of
+    reference distances closer than ``tol``."""
+    ids, dists = np.asarray(ids), np.asarray(dists)
+    ids_ref, dists_ref = np.asarray(ids_ref), np.asarray(dists_ref)
+    np.testing.assert_allclose(dists, dists_ref, rtol=1e-4, atol=tol)
+    bad = []
+    for r in range(ids.shape[0]):
+        for j in np.nonzero(ids[r] != ids_ref[r])[0]:
+            if abs(dists[r, j] - dists_ref[r, j]) > tol:
+                bad.append((r, j))
+        if set(ids[r].tolist()) != set(ids_ref[r].tolist()):
+            bad.append((r, "set"))
+    assert not bad, f"{len(bad)} true mismatches, first {bad[:5]}"
+
+
+@pytest.fixture(scope="module")
+def built():
+    x, centers = _blobs(jax.random.PRNGKey(0), 2000, 16, 16)
+    index = IVFIndex.build(x, k=16, max_iters=8)
+    return x, centers, index
+
+
+# --- acceptance (a): nprobe = k equals brute force -------------------------
+
+def test_full_probe_equals_brute(built):
+    x, _, index = built
+    q = x[:48]
+    ids, dists = index.search(q, topk=10, nprobe=16)
+    ids_ref, dists_ref = index.search_brute(q, topk=10)
+    assert_topk_match(ids, dists, ids_ref, dists_ref)
+    # self-queries come back at rank 0 with distance ~0
+    assert np.array_equal(np.asarray(ids[:, 0]), np.arange(48))
+
+
+def test_full_probe_equals_brute_tiny():
+    """Tiny, well-separated shape: bitwise-identical candidate ordering,
+    so the equality is exact (ids and set, every row)."""
+    x, _ = _blobs(jax.random.PRNGKey(3), 200, 4, 8)
+    index = IVFIndex.build(x, k=4, max_iters=6)
+    q = x[:16]
+    ids, dists = index.search(q, topk=5, nprobe=4)
+    ids_ref, dists_ref = index.search_brute(q, topk=5)
+    assert np.array_equal(np.asarray(ids), np.asarray(ids_ref))
+    np.testing.assert_allclose(np.asarray(dists), np.asarray(dists_ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --- acceptance (b): recall@10 at nprobe = k/4 -----------------------------
+
+def test_recall_at_partial_probe(built):
+    x, _, index = built
+    q = x[100:164]
+    ids, _ = index.search(q, topk=10, nprobe=4)          # k/4
+    ids_ref, _ = index.search_brute(q, topk=10)
+    recall = np.mean([
+        len(set(a.tolist()) & set(b.tolist())) / 10
+        for a, b in zip(np.asarray(ids), np.asarray(ids_ref))])
+    assert recall >= 0.9, f"recall@10 = {recall}"
+
+
+# --- acceptance (c): online add + refresh ----------------------------------
+
+def test_add_refresh_finds_new_vectors(built):
+    x, centers, _ = built
+    index = IVFIndex.build(x, k=16, max_iters=8)         # fresh copy
+    n0 = len(index)
+    x_new = centers[:8] + 0.05
+    a = index.add(x_new)
+    assert a.shape == (8,) and len(index) == n0 + 8
+    index.refresh()
+    ids, dists = index.search(x_new, topk=5, nprobe=4)
+    assert np.array_equal(np.asarray(ids[:, 0]),
+                          n0 + np.arange(8))             # rank 0 = themselves
+    np.testing.assert_allclose(np.asarray(dists[:, 0]), 0.0, atol=1e-3)
+
+
+def test_refresh_recommits_stats(built):
+    x, _, _ = built
+    index = IVFIndex.build(x, k=16, max_iters=8)
+    c_before = np.asarray(index.centroids)
+    w_before = float(index.stats.weight)
+    assert w_before == pytest.approx(len(index))
+    # heavy drift batch far from everything pulls its cell's centroid
+    x_new = jnp.full((64, 16), 25.0)
+    cell = int(index.add(x_new)[0])
+    index.refresh()
+    c_after = np.asarray(index.centroids)
+    assert float(index.stats.weight) == pytest.approx(len(index))
+    assert np.abs(c_after[cell] - c_before[cell]).max() > 1.0
+    # refresh with no pending evidence is a no-op on the centroids
+    c2 = np.asarray(index.refresh().centroids)
+    np.testing.assert_allclose(c2, c_after)
+
+
+def test_add_empty_batch_is_noop():
+    x, _ = _blobs(jax.random.PRNGKey(9), 100, 4, 8)
+    index = IVFIndex.build(x, k=4, max_iters=2)
+    a = index.add(jnp.zeros((0, 8)))
+    assert a.shape == (0,) and len(index) == 100
+    c2 = np.asarray(index.refresh().centroids)
+    assert np.all(np.isfinite(c2))
+
+
+def test_capacity_grows_on_skewed_adds():
+    x, _ = _blobs(jax.random.PRNGKey(5), 300, 4, 8)
+    index = IVFIndex.build(x, k=4, max_iters=4)
+    cap0 = index.cap
+    hot = jnp.tile(x[:1], (cap0 + 40, 1))                # one hot cell
+    index.add(hot + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(6), hot.shape))
+    assert index.cap > cap0
+    ids, offsets = index.posting_lists()
+    assert int(offsets[-1]) == len(index)
+    assert np.array_equal(np.sort(np.asarray(ids)), np.arange(len(index)))
+
+
+# --- acceptance (d): fused top-L == jax.lax.top_k --------------------------
+
+def test_flash_probe_bit_exact_vs_topk():
+    """Single-K-tile tiny shapes: the kernel's tile dot is the oracle's
+    dense dot, so indices AND selected scores are bitwise identical
+    (bitwise parity is at the kernel-score level — the ``||q||^2``
+    re-add lives in two different XLA graphs; short d-reductions keep
+    the two graphs' dot lowering identical)."""
+    for (n, k, d, l) in [(16, 8, 8, 4), (32, 16, 8, 8), (24, 16, 4, 4)]:
+        kq, kc = jax.random.split(jax.random.PRNGKey(n + k))
+        q = jax.random.normal(kq, (n, d))
+        c = jax.random.normal(kc, (k, d))
+        idx, v = ops.flash_probe(q, c, l=l, block_n=n, block_k=k,
+                                 want_dists=False)
+        idx_ref, v_ref = ref.probe_ref(q, c, l, want_dists=False)
+        assert np.array_equal(np.asarray(idx), np.asarray(idx_ref))
+        assert np.array_equal(np.asarray(v), np.asarray(v_ref))
+
+
+# --- CSR construction ------------------------------------------------------
+
+def test_csr_from_assignments_is_inverse_mapping():
+    a = jnp.asarray([2, 0, 2, 1, 0, 2, 4], jnp.int32)
+    order, offsets = csr_from_assignments(a, 5)
+    assert np.array_equal(np.asarray(offsets), [0, 2, 3, 6, 6, 7])
+    # stable: original order preserved within each cluster
+    assert np.array_equal(np.asarray(order), [1, 4, 3, 0, 2, 5, 6])
+    # empty cluster 3 is a zero-length segment
+
+
+def test_build_posting_lists_partition_corpus(built):
+    x, _, index = built
+    ids, offsets = index.posting_lists()
+    assert int(offsets[-1]) == 2000
+    assert np.array_equal(np.sort(np.asarray(ids)), np.arange(2000))
+    # every stored row matches its source vector
+    a, _ = ops.flash_assign(x, index.centroids)
+    counts = np.bincount(np.asarray(a), minlength=16)
+    assert np.array_equal(np.asarray(index.counts), counts)
+
+
+def test_search_validates_topk():
+    x, _ = _blobs(jax.random.PRNGKey(7), 100, 4, 8)
+    index = IVFIndex.build(x, k=4, max_iters=2)
+    with pytest.raises(ValueError, match="candidate pool"):
+        index.search(x[:4], topk=10_000, nprobe=1)
+
+
+# --- out-of-core build -----------------------------------------------------
+
+def test_chunked_build_matches_incore_contract():
+    x, _ = _blobs(jax.random.PRNGKey(8), 1200, 8, 12)
+    index = IVFIndex.build(np.asarray(x), k=8, max_iters=4, chunk_size=400)
+    assert len(index) == 1200
+    ids, offsets = index.posting_lists()
+    assert np.array_equal(np.sort(np.asarray(ids)), np.arange(1200))
+    q = x[:24]
+    ids_f, d_f = index.search(q, topk=8, nprobe=8)
+    ids_b, d_b = index.search_brute(q, topk=8)
+    assert_topk_match(ids_f, d_f, ids_b, d_b)
+
+
+# --- serving engine --------------------------------------------------------
+
+def test_search_engine_pads_and_refreshes(built):
+    from repro.serve.engine import SearchConfig, SearchEngine
+    x, centers, _ = built
+    index = IVFIndex.build(x, k=16, max_iters=6)
+    eng = SearchEngine(index, SearchConfig(topk=5, nprobe=4,
+                                           query_batch=64,
+                                           refresh_every=2))
+    ids, dists = eng.search(x[:10])                      # padded to 64
+    assert ids.shape == (10, 5) and dists.shape == (10, 5)
+    assert np.array_equal(np.asarray(ids[:, 0]), np.arange(10))
+    assert eng.queries_served == 10
+    eng.add(centers[:4] + 0.02)
+    assert eng.refresh_count == 0
+    eng.add(centers[4:8] + 0.02)                         # 2nd add -> flush
+    assert eng.refresh_count == 1 and eng.adds_since_refresh == 0
+    with pytest.raises(ValueError, match="query batch"):
+        eng.search(x[:65])

@@ -1,0 +1,166 @@
+"""FlashProbe fused top-L kernel vs the jax.lax.top_k dense oracle:
+bit-exactness on single-K-tile shapes, index-exactness + tight value
+agreement across tiled/ragged shapes, tie-breaking parity, the grouped
+(per-query-candidate) scan variant, and argmin (L=1) equivalence with
+FlashAssign (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import heuristics
+from repro.kernels import ops, ref
+
+
+def _data(n, k, d, dtype=jnp.float32, seed=0):
+    kq, kc = jax.random.split(jax.random.PRNGKey(seed))
+    q = jax.random.normal(kq, (n, d), dtype)
+    c = jax.random.normal(kc, (k, d), dtype)
+    return q, c
+
+
+# one K tile, no shape padding, short d-reduction: the kernel's score
+# computation lowers to the same XLA dot as the dense oracle -> bitwise
+# identical selection
+TINY = [(16, 8, 8, 4), (32, 16, 8, 4), (64, 32, 8, 8), (8, 8, 8, 8),
+        (24, 16, 4, 4)]
+
+
+@pytest.mark.parametrize("n,k,d,l", TINY)
+def test_bit_exact_vs_topk_tiny(n, k, d, l):
+    q, c = _data(n, k, d, seed=n + k)
+    # kernel-level scores: bitwise identical to top_k of the dense matrix
+    idx, v = ops.flash_probe(q, c, l=l, block_n=max(n, 8), block_k=max(k, 8),
+                             want_dists=False)
+    idx_ref, v_ref = ref.probe_ref(q, c, l, want_dists=False)
+    assert np.array_equal(np.asarray(idx), np.asarray(idx_ref))
+    assert np.array_equal(np.asarray(v), np.asarray(v_ref))
+    # true distances: the ||q||^2 re-add lives in two different XLA
+    # graphs, so parity is ULP-tight rather than bitwise
+    _, dv = ops.flash_probe(q, c, l=l, block_n=max(n, 8), block_k=max(k, 8))
+    _, dv_ref = ref.probe_ref(q, c, l)
+    np.testing.assert_allclose(np.asarray(dv), np.asarray(dv_ref),
+                               rtol=1e-6, atol=1e-5)
+
+
+# ragged N/K (padding + multi-tile K sweep): the tiled dot may round
+# differently at ULP level, so indices must match but values are close
+RAGGED = [(100, 37, 19, 5), (257, 129, 33, 10), (513, 100, 7, 16),
+          (33, 65, 3, 65), (1000, 256, 64, 32)]
+
+
+@pytest.mark.parametrize("n,k,d,l", RAGGED)
+def test_topk_parity_ragged(n, k, d, l):
+    q, c = _data(n, k, d, seed=n)
+    idx, v = ops.flash_probe(q, c, l=l, block_n=64, block_k=32)
+    idx_ref, v_ref = ref.probe_ref(q, c, l)
+    assert np.array_equal(np.asarray(idx), np.asarray(idx_ref))
+    np.testing.assert_allclose(np.asarray(v), np.asarray(v_ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_exact_ties_break_to_lower_index():
+    """Duplicated centroids: top_k prefers the lower index; so must we."""
+    q, c = _data(50, 12, 6, seed=3)
+    c = jnp.concatenate([c, c, c[:4]])          # many exact duplicates
+    idx, v = ops.flash_probe(q, c, l=12, block_n=16, block_k=8)
+    idx_ref, v_ref = ref.probe_ref(q, c, 12)
+    assert np.array_equal(np.asarray(idx), np.asarray(idx_ref))
+
+
+def test_l_equals_1_matches_flash_assign():
+    q, c = _data(200, 40, 12, seed=1)
+    idx, v = ops.flash_probe(q, c, l=1)
+    a, m = ops.flash_assign(q, c)
+    assert np.array_equal(np.asarray(idx[:, 0]), np.asarray(a))
+    np.testing.assert_allclose(np.asarray(v[:, 0]), np.asarray(m),
+                               rtol=1e-6)
+
+
+def test_block_shape_invariance():
+    q, c = _data(130, 70, 9, seed=7)
+    outs = [ops.flash_probe(q, c, l=7, block_n=bn, block_k=bk)
+            for bn, bk in [(8, 8), (128, 128), (64, 16)]]
+    i0, v0 = outs[0]
+    for i1, v1 in outs[1:]:
+        assert np.array_equal(np.asarray(i0), np.asarray(i1))
+        np.testing.assert_allclose(np.asarray(v0), np.asarray(v1),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_values_sorted_ascending():
+    q, c = _data(64, 50, 5, seed=9)
+    _, v = ops.flash_probe(q, c, l=10)
+    v = np.asarray(v)
+    assert np.all(np.diff(v, axis=1) >= 0)
+
+
+def test_want_dists_false_omits_query_norm():
+    q, c = _data(20, 10, 4, seed=2)
+    _, v = ops.flash_probe(q, c, l=3, want_dists=False)
+    _, vd = ops.flash_probe(q, c, l=3, want_dists=True)
+    qsq = np.sum(np.asarray(q, np.float32) ** 2, axis=1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(vd),
+                               np.maximum(np.asarray(v) + qsq, 0.0),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_l_bounds_raise():
+    q, c = _data(10, 5, 4)
+    with pytest.raises(ValueError, match="l <= K"):
+        ops.flash_probe(q, c, l=6)
+    with pytest.raises(ValueError, match="l >= 1"):
+        ops.flash_probe(q, c, l=0)
+    cand = jnp.broadcast_to(c, (10, 5, 4))
+    with pytest.raises(ValueError, match="l <= C"):
+        ops.flash_probe_grouped(q, cand, l=6)
+
+
+# --- grouped (posting-list scan) variant ----------------------------------
+
+def test_grouped_matches_per_query_topk():
+    """Each query scores its own candidate block."""
+    b, cn, d, l = 37, 53, 11, 9
+    kq, kc = jax.random.split(jax.random.PRNGKey(5))
+    q = jax.random.normal(kq, (b, d))
+    cand = jax.random.normal(kc, (b, cn, d))
+    idx, v = ops.flash_probe_grouped(q, cand, l=l, block_b=16, block_c=16)
+    for i in range(b):
+        idx_ref, v_ref = ref.probe_ref(q[i:i + 1], cand[i], l)
+        assert np.array_equal(np.asarray(idx[i]), np.asarray(idx_ref[0]))
+        np.testing.assert_allclose(np.asarray(v[i]), np.asarray(v_ref[0]),
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_grouped_shared_candidates_match_flash_probe():
+    """Broadcasting one candidate set across queries reduces the grouped
+    kernel to the shared-centroid kernel."""
+    q, c = _data(24, 32, 8, seed=11)
+    cand = jnp.broadcast_to(c, (24, 32, 8))
+    gi, gv = ops.flash_probe_grouped(q, cand, l=6, block_b=8, block_c=16)
+    si, sv = ops.flash_probe(q, c, l=6, block_n=8, block_k=16)
+    assert np.array_equal(np.asarray(gi), np.asarray(si))
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(sv),
+                               rtol=1e-5, atol=1e-5)
+
+
+# --- heuristics entries ----------------------------------------------------
+
+def test_probe_blocks_fit_budget():
+    for (n, k, d, l) in [(256, 64, 32, 8), (100_000, 4096, 128, 64),
+                         (8, 8, 8, 8), (1 << 20, 1 << 16, 256, 100)]:
+        bn, bk = heuristics.choose_probe_blocks(n, k, d, l)
+        assert bn >= 8 and bk >= 128
+        budget = int(heuristics.TPU_V5E.vmem_bytes * 0.7)
+        l_pad = ((max(1, l) + 7) // 8) * 8
+        assert heuristics.probe_footprint(bn, bk, l_pad, d, 4) <= budget
+
+
+def test_scan_blocks_fit_budget_and_shape():
+    for (b, c, d, l) in [(64, 512, 24, 8), (1024, 1152, 64, 8),
+                         (8, 128, 8, 8), (4096, 8192, 128, 100)]:
+        bb, bc = heuristics.choose_scan_blocks(b, c, d, l)
+        assert bb >= 8 and bc >= 128
+        budget = int(heuristics.TPU_V5E.vmem_bytes * 0.7)
+        l_pad = ((max(1, l) + 7) // 8) * 8
+        assert heuristics.scan_footprint(bb, bc, l_pad, d, 4) <= budget
