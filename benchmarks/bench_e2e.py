@@ -10,7 +10,7 @@ import jax.numpy as jnp
 
 from benchmarks import common as C
 from repro.core import KMeansConfig, lloyd_step
-from repro.core.heuristics import choose_step_impl
+from repro.core.plan import default_planner
 from repro.kernels import ref
 
 REGIMES = [
@@ -82,7 +82,7 @@ def rows() -> list[str]:
             f"modeled_speedup_vs_std={t_std/t_fused:.1f}x;"
             f"io_bytes={C.lloyd_bytes_fused(n, k, d) * b:.3g}"
             f"_vs_two_pass={C.lloyd_bytes_two_pass(n, k, d) * b:.3g};"
-            f"heuristic={choose_step_impl(n, k, d)}"))
+            f"heuristic={default_planner().step_impl(n, k, d)}"))
 
     # memory-wall demonstration (paper §1: N=65536,K=1024,d=128,B=32)
     n, k, d, b = 65536, 1024, 128, 32

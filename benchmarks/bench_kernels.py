@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from benchmarks import common as C
-from repro.core.heuristics import choose_step_impl
+from repro.core.plan import default_planner
 from repro.kernels import ops, ref
 
 # paper's Fig-4 configs (D=128); CPU-walled at reduced N, modeled at full N
@@ -87,7 +87,7 @@ def rows() -> list[str]:
                  + C.modeled_time_s(C.update_flops_sort_inverse(n, k, D),
                                     C.update_bytes_sort_inverse(n, k, D)))
         t_fused = C.modeled_time_s(C.lloyd_flops_fused(n, k, D), by_fused)
-        impl = choose_step_impl(n, k, D)
+        impl = default_planner().step_impl(n, k, D)
         out.append(C.fmt_row(
             f"lloyd_two_pass_N{n}_K{k}", t_two * 1e6,
             f"modeled_hbm_bytes={by_two:.3g};modeled_tpu"))

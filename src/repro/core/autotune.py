@@ -1,6 +1,10 @@
 """Exhaustive block-shape autotuner — the *baseline* the paper's
 cache-aware heuristic is measured against (paper Fig. 5 / our
-benchmarks/bench_compile.py).
+benchmarks/bench_compile.py), and the measurement backend of the
+``KernelPlanner``'s ``refine="measure"`` path
+(``core.plan.KernelPlanner.fold_measured`` folds a ``TuneReport`` back
+into the plan cache, so the oracle config is paid for once and then
+served from memory/disk like any other plan).
 
 Compiles and times every candidate (B_N, B_K) pair for both kernels on the
 given shape, returning the oracle config plus tuning telemetry
@@ -56,7 +60,7 @@ def exhaustive_tune(n: int, k: int, d: int, *, dtype=jnp.float32,
     x = jax.random.normal(key, (n, d), dtype)
     c = jax.random.normal(jax.random.fold_in(key, 1), (k, d), dtype)
 
-    budget = int(hw.vmem_bytes * 0.7)
+    budget = heuristics.vmem_budget(hw)
     table: dict = {}
     compiles = 0
     t0 = time.perf_counter()
@@ -103,11 +107,16 @@ def exhaustive_tune(n: int, k: int, d: int, *, dtype=jnp.float32,
 
 def heuristic_tune(n: int, k: int, d: int, *, dtype=jnp.float32,
                    hw: heuristics.Hardware = heuristics.TPU_V5E) -> TuneReport:
-    """The paper's path: closed-form config, one compile per kernel."""
+    """The paper's path: closed-form config, one compile per kernel.
+
+    Routed through a fresh (memory-only) ``KernelPlanner`` so the timed
+    quantity is the real production planning path — chooser plus plan
+    construction — not the bare arithmetic.
+    """
+    from repro.core import plan as _plan
     t0 = time.perf_counter()
-    blk = heuristics.choose_blocks(n, k, d,
-                                   dtype_bytes=jnp.dtype(dtype).itemsize,
-                                   hw=hw)
+    planner = _plan.KernelPlanner(hw=hw, persist=False)
+    blk = planner.block_config(n, k, d, jnp.dtype(dtype).itemsize)
     return TuneReport(best=blk, num_compiles=2,
                       tune_seconds=time.perf_counter() - t0,
                       best_assign_us=float("nan"),

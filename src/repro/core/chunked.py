@@ -16,6 +16,7 @@ iteration is byte-for-byte a Lloyd iteration over the full dataset.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Iterator, Sequence
 
@@ -63,12 +64,15 @@ def _chunk_step(cfg: KMeansConfig):
     Out-of-core is where the fused FlashLloyd pass pays off most: one HBM
     stream of the chunk instead of three (assign read, argsort + row
     gather, update read) — the chunk's stats are reduced while the next
-    chunk's H2D copy is still in flight.
+    chunk's H2D copy is still in flight. The block config is planned by
+    the driver (one ``KernelPlanner`` lookup per chunk-shape bucket) and
+    enters as a static argument, so a ragged tail chunk re-traces but
+    never re-plans.
     """
 
-    @jax.jit
-    def step(x: Array, c: Array) -> SufficientStats:
-        stats, _ = SufficientStats.from_batch(x, c, cfg)
+    @functools.partial(jax.jit, static_argnames=("blk",))
+    def step(x: Array, c: Array, blk=None) -> SufficientStats:
+        stats, _ = SufficientStats.from_batch(x, c, cfg, blk=blk)
         return stats
 
     return step
@@ -142,8 +146,13 @@ class ChunkedKMeans:
             else:
                 self.stats.dispatch_h2d_seconds += time.perf_counter() - t0
             nxt = next(it, None)
+            # plan the chunk's dispatch (a KernelPlanner cache hit for
+            # every chunk after the first of its shape bucket)
+            blk = (None if self.cfg.block is not None else
+                   self.cfg.blocks_for(shape[0], shape[1],
+                                       buf.dtype.itemsize))
             t0 = time.perf_counter()
-            part = self._step(buf, c)             # enqueued; overlaps next put
+            part = self._step(buf, c, blk)        # enqueued; overlaps next put
             if sampled:
                 jax.block_until_ready(part)
                 self.stats.compute_seconds += time.perf_counter() - t0

@@ -61,6 +61,10 @@ def shard_map_compat(f, *, mesh, in_specs, out_specs):
 
 
 def _local_stats(x: Array, a: Array, k: int, cfg: KMeansConfig):
+    # planned at the *per-shard* shape: inside shard_map the trace sees
+    # the local N (and the local K range for K-sharding), so the
+    # KernelPlanner keys the plan on what each chip actually launches —
+    # one cached plan per shard geometry, not per global shape
     blk = cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
     return ops.centroid_stats(
         x, a, k=k, impl=cfg.stats_only_update_impl(),

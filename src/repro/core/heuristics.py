@@ -51,9 +51,68 @@ TPU_V5E = Hardware(
     h2d_bw=32e9,
 )
 
+TPU_V4 = Hardware(
+    name="tpu_v4",
+    vmem_bytes=16 * 2**20,
+    lane=128,
+    sublane=8,
+    mxu=128,
+    flops_bf16=275e12,
+    hbm_bw=1228e9,
+    ici_bw=50e9,
+    hbm_bytes=32 * 2**30,
+    h2d_bw=32e9,
+)
+
+TPU_V5P = Hardware(
+    name="tpu_v5p",
+    vmem_bytes=16 * 2**20,
+    lane=128,
+    sublane=8,
+    mxu=128,
+    flops_bf16=459e12,
+    hbm_bw=2765e9,
+    ici_bw=100e9,
+    hbm_bytes=95 * 2**30,
+    h2d_bw=32e9,
+)
+
+TPU_V6E = Hardware(
+    name="tpu_v6e",
+    vmem_bytes=32 * 2**20,
+    lane=128,
+    sublane=8,
+    mxu=256,
+    flops_bf16=918e12,
+    hbm_bw=1640e9,
+    ici_bw=50e9,
+    hbm_bytes=32 * 2**30,
+    h2d_bw=32e9,
+)
+
+# ``jax.devices()[0].device_kind`` (lowercased, spaces stripped) substring
+# -> Hardware row. Ordered: first match wins, so the more specific names
+# come first ("tpu v5 lite" must not match the bare-"v5" v5p row).
+# ``core.plan.detect_hardware`` walks this table; TPU_V5E is its explicit
+# fallback for unknown generations and non-TPU (interpret-mode) backends.
+HARDWARE_TABLE = (
+    ("v6", TPU_V6E),
+    ("v5p", TPU_V5P),
+    ("v5lite", TPU_V5E),
+    ("v5e", TPU_V5E),
+    ("v5", TPU_V5P),
+    ("v4", TPU_V4),
+)
+
 # Budget fraction: leave headroom for Pallas pipeline internals + spills.
 _VMEM_FRACTION = 0.7
 _CANDIDATE_TILES = (128, 256, 512, 1024, 2048)
+
+
+def vmem_budget(hw: Hardware = TPU_V5E) -> int:
+    """The soft VMEM budget the closed-form choosers plan against (the
+    full ``hw.vmem_bytes`` is the hard ceiling the wrappers audit)."""
+    return int(hw.vmem_bytes * _VMEM_FRACTION)
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -150,7 +209,7 @@ def choose_scan_blocks(b: int, c: int, d: int, l: int, *,
     to the wider candidate dim (longer sweep per selection state, and
     the lane-aligned axis).
     """
-    budget = int(hw.vmem_bytes * _VMEM_FRACTION)
+    budget = vmem_budget(hw)
     l_pad = _round_up(max(1, l), hw.sublane)
     b_lim = _round_up(b, hw.sublane)
     c_lim = _round_up(c, hw.lane)
@@ -217,7 +276,7 @@ def choose_step_impl(n: int, k: int, d: int, *, dtype_bytes: int = 4,
     explicit ``BlockConfig`` so feasibility is judged for the tiles that
     will actually be launched.
     """
-    budget = int(hw.vmem_bytes * _VMEM_FRACTION)
+    budget = vmem_budget(hw)
     if blk is None:
         blk = choose_blocks(n, k, d, dtype_bytes=dtype_bytes, hw=hw)
     k_pad = _round_up(k, blk.fused_block_k)
@@ -254,7 +313,7 @@ def choose_probe_blocks(n: int, k: int, d: int, l: int, *,
     ``L·(L + B_K)``: keep B_K moderate when L is large and give the query
     tile the remaining budget (more reuse of the streamed centroid tile).
     """
-    budget = int(hw.vmem_bytes * _VMEM_FRACTION)
+    budget = vmem_budget(hw)
     l_pad = _round_up(max(1, l), hw.sublane)
     # large L shifts the sweep from MXU matmul to VPU selection rounds;
     # cap B_K so the merged pool stays within a few multiples of B_K.
@@ -278,7 +337,7 @@ def choose_probe_blocks(n: int, k: int, d: int, l: int, *,
 def choose_blocks(n: int, k: int, d: int, *, dtype_bytes: int = 4,
                   hw: Hardware = TPU_V5E) -> BlockConfig:
     """Closed-form block selection — zero search, O(#candidates) arithmetic."""
-    budget = int(hw.vmem_bytes * _VMEM_FRACTION)
+    budget = vmem_budget(hw)
 
     # --- FlashAssign: the K stream wants large B_K tiles for MXU shape;
     # the resident point tile then takes what is left.

@@ -18,7 +18,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import heuristics
+from repro.core import plan as _plan
 from repro.core.init import init_centroids
 from repro.kernels import ops, ref
 from repro.kernels.ops import BlockConfig
@@ -35,24 +35,32 @@ class KMeansConfig:
     assign_impl: str = "flash"        # flash | ref
     update_impl: str = "sort_inverse" # sort_inverse | scatter | dense_onehot | fused
     step_impl: str = "auto"           # auto | fused | two_pass
-    block: BlockConfig | None = None  # None -> cache-aware heuristic
+    block: BlockConfig | None = None  # None -> KernelPlanner plan
     interpret: bool | None = None     # None -> auto (CPU interpret, TPU compiled)
     dtype: jnp.dtype | None = None    # compute dtype override for x/c
+    # planning layer override (None -> the process-wide default planner);
+    # excluded from eq/hash so configs stay comparable/jit-closable
+    planner: "_plan.KernelPlanner | None" = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    def _planner(self) -> "_plan.KernelPlanner":
+        return self.planner if self.planner is not None \
+            else _plan.default_planner()
 
     def blocks_for(self, n: int, d: int, dtype_bytes: int) -> BlockConfig:
         if self.block is not None:
             return self.block
-        return heuristics.choose_blocks(n, self.k, d, dtype_bytes=dtype_bytes)
+        return self._planner().block_config(n, self.k, d, dtype_bytes)
 
     def resolved_step_impl(self, n: int, d: int, dtype_bytes: int,
                            blk: BlockConfig | None = None) -> str:
         """'fused' (single FlashLloyd pass) or 'two_pass' (assign+update).
 
-        ``step_impl="auto"`` applies the VMEM + roofline crossover rule of
-        ``heuristics.choose_step_impl``, judged at the block shapes that
-        will actually be launched (``blk`` if given, else ``self.block``,
-        else the heuristic's own) — but only on the flash + sort_inverse
-        fast path;
+        ``step_impl="auto"`` applies the VMEM + roofline crossover rule —
+        the ``KernelPlanner``'s cached step plan — judged at the block
+        shapes that will actually be launched (``blk`` if given, else
+        ``self.block``, else the plan's own) — but only on the flash +
+        sort_inverse fast path;
         explicitly requested reference impls are honoured so baselines
         stay comparable. ``update_impl="fused"`` is an alias for
         ``step_impl="fused"``; either spelling combined with
@@ -78,8 +86,8 @@ class KMeansConfig:
             raise ValueError(f"unknown step impl {self.step_impl!r}")
         if self.assign_impl != "flash" or self.update_impl != "sort_inverse":
             return "two_pass"
-        return heuristics.choose_step_impl(
-            n, self.k, d, dtype_bytes=dtype_bytes,
+        return self._planner().step_impl(
+            n, self.k, d, dtype_bytes,
             blk=blk if blk is not None else self.block)
 
     def stats_only_update_impl(self) -> str:

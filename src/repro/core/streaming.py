@@ -19,7 +19,11 @@ is that reduction type, shared by three drivers:
 The per-batch kernel work is exactly ``core.kmeans.lloyd_stats`` — the
 fused single-pass FlashLloyd kernel or the two-pass assign + sort-inverse
 pipeline, picked by ``KMeansConfig.step_impl`` — so the streaming layer
-adds no new dataflow, only a persistence policy for the reduction.
+adds no new dataflow, only a persistence policy for the reduction. Block
+shapes and the fused/two-pass decision come from the ``KernelPlanner``
+(via ``cfg.blocks_for``/``resolved_step_impl``): batch sizes are bucketed
+to powers of two, so a stream of ragged batches replans only on bucket
+boundaries and every repeated bucket is a pure cache hit.
 
 Semantics of ``partial_fit`` (decayed mini-batch Lloyd): with running
 stats ``(S, N)``, decay ``gamma`` and a batch contributing ``(s, n)``

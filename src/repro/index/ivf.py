@@ -43,7 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import heuristics
+from repro.core import plan as _plan
 from repro.core.chunked import ChunkedKMeans
 from repro.core.init import init_centroids
 from repro.core.kmeans import KMeans, KMeansConfig
@@ -130,7 +130,8 @@ class IVFIndex:
     """
 
     def __init__(self, centroids: Array, capacity: int, *,
-                 interpret: bool | None = None):
+                 interpret: bool | None = None,
+                 planner: "_plan.KernelPlanner | None" = None):
         k, d = centroids.shape
         self.centroids = centroids
         self.k, self.d = k, d
@@ -145,8 +146,13 @@ class IVFIndex:
         # from) and pending evidence (folded in by the next refresh)
         self.stats = SufficientStats.zero(k, d)
         self._pending = SufficientStats.zero(k, d)
-        self._blk = heuristics.choose_blocks(4096, k, d,
-                                             dtype_bytes=jnp.dtype(dt).itemsize)
+        # all block shapes come from the planner, per *observed* shape
+        # bucket — assignment blocks at each add batch's size, search
+        # blocks once per query geometry (cached below; repeated traffic
+        # is a pure cache hit, zero chooser calls)
+        self.planner = planner if planner is not None \
+            else _plan.default_planner()
+        self._search_plans: dict[tuple, tuple[int, int, int, int]] = {}
 
     # ------------------------------------------------------------------
     # construction
@@ -156,7 +162,8 @@ class IVFIndex:
     def build(cls, x, k: int, *, max_iters: int = 10, init: str = "kmeans++",
               tol: float = 0.0, step_impl: str = "auto",
               capacity: int | None = None, chunk_size: int | None = None,
-              seed: int = 0, interpret: bool | None = None) -> "IVFIndex":
+              seed: int = 0, interpret: bool | None = None,
+              planner: "_plan.KernelPlanner | None" = None) -> "IVFIndex":
         """Train coarse centroids and invert the corpus into posting lists.
 
         ``x``: (N, d) array — or, with ``chunk_size`` set, a host numpy
@@ -165,16 +172,21 @@ class IVFIndex:
         stays O(chunk + K·cap·d)).
         """
         cfg = KMeansConfig(k=k, max_iters=max_iters, init=init, tol=tol,
-                           step_impl=step_impl, interpret=interpret)
+                           step_impl=step_impl, interpret=interpret,
+                           planner=planner)
         key = jax.random.PRNGKey(seed)
         if chunk_size is None:
             xj = jnp.asarray(x)
             centroids = KMeans(cfg).fit(key, xj).centroids
+            blk = cfg.blocks_for(xj.shape[0], xj.shape[1],
+                                 xj.dtype.itemsize)
             a, m = ops.flash_assign(xj, centroids.astype(xj.dtype),
+                                    block_n=blk.assign_block_n,
+                                    block_k=blk.assign_block_k,
                                     interpret=interpret)
             cap = capacity if capacity is not None else int(
                 jnp.max(jnp.bincount(a, length=k)))
-            index = cls(centroids, cap, interpret=interpret)
+            index = cls(centroids, cap, interpret=interpret, planner=planner)
             index._fold(xj, a, m)
         else:
             # out-of-core: ChunkedKMeans trains (init from the first
@@ -184,7 +196,7 @@ class IVFIndex:
             c0 = init_centroids(key, jnp.asarray(first), k, init)
             centroids, _ = driver.fit(x, c0)
             index = cls(centroids, capacity if capacity is not None else 8,
-                        interpret=interpret)
+                        interpret=interpret, planner=planner)
             for chunk in driver._chunks(x):
                 index.add(chunk)
         # build-time evidence is the committed baseline, not drift:
@@ -209,18 +221,27 @@ class IVFIndex:
         x_new = jnp.asarray(x_new, self.buckets.dtype)
         if x_new.shape[0] == 0:
             return jnp.zeros((0,), jnp.int32)
+        # planned per observed batch-shape bucket (not a magic batch
+        # size): a stream of same-bucket adds never replans
+        blk = self._batch_blocks(x_new.shape[0])
         a, m = ops.flash_assign(x_new, self.centroids.astype(x_new.dtype),
-                                block_n=self._blk.assign_block_n,
-                                block_k=self._blk.assign_block_k,
+                                block_n=blk.assign_block_n,
+                                block_k=blk.assign_block_k,
                                 interpret=self.interpret)
         self._fold(x_new, a, m)
         return a
 
+    def _batch_blocks(self, n: int):
+        """Assign/update tiles for an ``n``-row batch (planner-cached)."""
+        return self.planner.block_config(
+            n, self.k, self.d, jnp.dtype(self.buckets.dtype).itemsize)
+
     def _fold(self, x: Array, a: Array, m: Array) -> None:
         """Append a pre-assigned batch and account its statistics."""
+        blk = self._batch_blocks(x.shape[0])
         s, cnt = ops.centroid_stats(
-            x, a, k=self.k, block_n=self._blk.update_block_n,
-            block_k=self._blk.update_block_k, interpret=self.interpret)
+            x, a, k=self.k, block_n=blk.update_block_n,
+            block_k=blk.update_block_k, interpret=self.interpret)
         self._pending = self._pending.merge(
             SufficientStats(s, cnt, jnp.sum(m)))
         self._append(x, a)
@@ -273,6 +294,32 @@ class IVFIndex:
     # queries
     # ------------------------------------------------------------------
 
+    def plan_search(self, b: int, topk: int = 10, nprobe: int = 8
+                    ) -> tuple[int, int, int, int]:
+        """Plan (and cache) the two search-stage kernels for a geometry.
+
+        Returns ``(bqn, bqk, bsb, bsc)`` — probe and scan tiles for a
+        ``(b, d)`` query batch at this index's current ``(k, cap)``. The
+        plan is cached on the index per ``(b, nprobe, topk, cap)`` (cap
+        growth changes the candidate block and naturally re-keys), so the
+        per-call chooser recompute this method replaces can never return
+        to the hot path. Serving layers with a fixed padded batch shape
+        (``serve.engine.SearchEngine``) call this once at config time.
+        """
+        nprobe = min(nprobe, self.k)
+        geom = (int(b), nprobe, int(topk), self.cap)
+        plans = self._search_plans.get(geom)
+        if plans is None:
+            dt = self.buckets.dtype
+            probe = self.planner.plan("probe", (b, self.k, self.d, nprobe),
+                                      dt)
+            scan = self.planner.plan("scan",
+                                     (b, nprobe * self.cap, self.d, topk),
+                                     dt)
+            plans = (*probe.blocks, *scan.blocks)
+            self._search_plans[geom] = plans
+        return plans
+
     def search(self, q, topk: int = 10, nprobe: int = 8
                ) -> tuple[Array, Array]:
         """Batched top-k search. q: (B, d) -> (ids (B, topk) int32,
@@ -288,10 +335,7 @@ class IVFIndex:
             raise ValueError(
                 f"topk={topk} exceeds the probed candidate pool "
                 f"nprobe*cap={cand}; raise nprobe or capacity")
-        bqn, bqk = heuristics.choose_probe_blocks(q.shape[0], self.k,
-                                                  self.d, nprobe)
-        bsb, bsc = heuristics.choose_scan_blocks(q.shape[0], cand, self.d,
-                                                 topk)
+        bqn, bqk, bsb, bsc = self.plan_search(q.shape[0], topk, nprobe)
         return _ivf_search(q, self.centroids, self.buckets, self.bucket_ids,
                            topk=topk, nprobe=nprobe, bqn=bqn, bqk=bqk,
                            bsb=bsb, bsc=bsc, interpret=self.interpret)

@@ -4,13 +4,20 @@ Handles shape padding to tile multiples, platform dispatch (interpret mode
 on CPU, compiled Pallas on TPU), batching, and the host-side prologue of
 the sort-inverse update (argsort + row gather + tile-pair compaction).
 
-All wrappers accept an optional ``BlockConfig``; when omitted the
-cache-aware heuristic (``repro.core.heuristics``) picks one.
+Block resolution: every wrapper accepts an optional ``plan=``
+(``core.plan.KernelPlan``) and/or explicit ``block_*`` overrides. When
+neither is given the process-wide ``KernelPlanner`` plans the dispatch —
+memoized per shape bucket, persisted on disk, hardware-detected — so no
+wrapper carries magic block defaults. Whatever the source, the tiles are
+audited against the hardware VMEM capacity (``core.heuristics``
+footprints) and auto-shrunk with a warning rather than lowered into a
+kernel that cannot fit.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -48,6 +55,97 @@ def default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _plan_leg(plan, leg: str) -> tuple[int, int]:
+    """Extract the tile dims a wrapper needs from a ``KernelPlan``."""
+    if plan.op == leg:
+        return plan.blocks
+    if plan.block is not None and leg in ("assign", "update", "fused"):
+        b = plan.block
+        return {"assign": (b.assign_block_n, b.assign_block_k),
+                "update": (b.update_block_n, b.update_block_k),
+                "fused": (b.fused_block_n, b.fused_block_k)}[leg]
+    raise ValueError(
+        f"a plan for op {plan.op!r} cannot drive the {leg!r} kernel")
+
+
+def _resolve_blocks(op: str, shape: tuple, dtype, block_n: int | None,
+                    block_k: int | None, plan, leg: str | None = None
+                    ) -> tuple[int, int]:
+    """Fill missing tile dims from ``plan`` (or the default planner).
+
+    Explicit ``block_*`` arguments always win; a provided ``plan`` covers
+    the rest; with neither, the process-wide ``KernelPlanner`` plans the
+    dispatch (runs at trace time only — the result is a cache hit for
+    every repeat of the shape bucket).
+    """
+    if block_n is not None and block_k is not None:
+        return block_n, block_k
+    if plan is None:
+        from repro.core.plan import default_planner
+        plan = default_planner().plan(op, shape, dtype)
+    pn, pk = _plan_leg(plan, leg or op)
+    return (pn if block_n is None else block_n,
+            pk if block_k is None else block_k)
+
+
+def _audit_blocks(op: str, bn: int, bk: int, d: int, itemsize: int, *,
+                  k: int | None = None, l: int | None = None,
+                  hw_name: str | None = None) -> tuple[int, int]:
+    """VMEM footprint audit: the resolved tiles must fit the hardware.
+
+    The closed-form choosers always respect the budget, but explicit
+    ``block_*`` arguments (or stale plans replayed on a larger ``d``) can
+    demand more VMEM than the chip has. Auto-shrinks (halving the larger
+    tile dim first) with a clear warning; raises only when even minimal
+    ``(8, 8)`` tiles cannot fit — that working set is irreducible (e.g.
+    the fused kernel's resident ``K·d`` accumulator), so the caller must
+    change dataflow, not tiles.
+
+    ``hw_name`` pins the chip to audit against (a supplied plan's
+    ``plan.hw`` — its tiles were sized for *that* VMEM, not the default
+    planner's); ``None`` audits against the detected hardware.
+    """
+    from repro.core import heuristics as H
+    from repro.core import plan as _planmod
+    hw = _planmod.hardware_by_name(hw_name)
+
+    def fp(a: int, b: int) -> int:
+        if op == "assign":
+            return H.assign_footprint(a, b, d, itemsize)
+        if op == "update":
+            return H.update_footprint(a, b, d, itemsize)
+        if op == "fused":
+            return H.fused_footprint(a, b, d, itemsize, _round_up(k, b))
+        l_pad = _round_up(max(1, l), 8)
+        if op == "probe":
+            return H.probe_footprint(a, b, l_pad, d, itemsize)
+        return H.scan_footprint(a, b, l_pad, d, itemsize)
+
+    ceiling = hw.vmem_bytes
+    orig = (bn, bk)
+    over = fp(bn, bk)
+    while fp(bn, bk) > ceiling:
+        if bk > 8 and (bk >= bn or bn <= 8):
+            bk //= 2
+        elif bn > 8:
+            bn //= 2
+        else:
+            raise ValueError(
+                f"{op} kernel working set ({fp(bn, bk)} bytes) exceeds "
+                f"{hw.name} VMEM ({ceiling} bytes) even at minimal (8, 8) "
+                f"tiles for d={d}"
+                + (f", K={k}" if op == "fused" else "")
+                + "; this dataflow cannot be tiled onto the chip — use the "
+                "two-pass path / reduce d")
+    if (bn, bk) != orig:
+        warnings.warn(
+            f"{op} blocks {orig} exceed the {hw.name} VMEM footprint "
+            f"budget ({over} > {ceiling} bytes) for d={d}; auto-shrunk to "
+            f"({bn}, {bk}) — drop the explicit block_* overrides to let "
+            "the KernelPlanner choose feasible tiles", stacklevel=3)
+    return bn, bk
+
+
 def _pad_to(x: Array, mult: int, axis: int, value) -> Array:
     size = x.shape[axis]
     pad = (-size) % mult
@@ -63,22 +161,30 @@ def _pad_to(x: Array, mult: int, axis: int, value) -> Array:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_k",
-                                             "interpret", "want_dists"))
-def flash_assign(x: Array, c: Array, *, block_n: int = 256,
-                 block_k: int = 256, interpret: bool | None = None,
+                                             "plan", "interpret",
+                                             "want_dists"))
+def flash_assign(x: Array, c: Array, *, block_n: int | None = None,
+                 block_k: int | None = None, plan=None,
+                 interpret: bool | None = None,
                  want_dists: bool = True) -> tuple[Array, Array]:
     """Fused assignment. x: (N, d), c: (K, d).
 
     Returns ``(assignments int32 (N,), min_sq_dists f32 (N,))``. Distances
     are true squared Euclidean distances (the ``||x||^2`` term is re-added
     outside the kernel); pass ``want_dists=False`` to skip that add.
+    Blocks come from ``plan``/``block_*`` or the default ``KernelPlanner``.
     """
     if interpret is None:
         interpret = default_interpret()
     n, d = x.shape
     k = c.shape[0]
+    block_n, block_k = _resolve_blocks("assign", (n, k, d), x.dtype,
+                                       block_n, block_k, plan)
     block_n = min(block_n, _round_up(n, 8))
     block_k = min(block_k, _round_up(k, 8))
+    block_n, block_k = _audit_blocks("assign", block_n, block_k, d,
+                                     x.dtype.itemsize,
+                                     hw_name=plan.hw if plan else None)
     xp = _pad_to(x, block_n, 0, 0)
     cp = _pad_to(c, block_k, 0, 0)
     a, m = _fa.flash_assign_raw(xp, cp, block_n=block_n, block_k=block_k,
@@ -100,9 +206,11 @@ def _round_up(v: int, mult: int) -> int:
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("k", "block_n", "block_k",
-                                             "interpret"))
-def sort_inverse_update(x: Array, a: Array, *, k: int, block_n: int = 512,
-                        block_k: int = 256, interpret: bool | None = None
+                                             "plan", "interpret"))
+def sort_inverse_update(x: Array, a: Array, *, k: int,
+                        block_n: int | None = None,
+                        block_k: int | None = None, plan=None,
+                        interpret: bool | None = None
                         ) -> tuple[Array, Array]:
     """Contention-free centroid statistics. x: (N, d), a: (N,) int32.
 
@@ -112,8 +220,13 @@ def sort_inverse_update(x: Array, a: Array, *, k: int, block_n: int = 512,
     if interpret is None:
         interpret = default_interpret()
     n, d = x.shape
+    block_n, block_k = _resolve_blocks("update", (n, k, d), x.dtype,
+                                       block_n, block_k, plan)
     block_n = min(block_n, _round_up(n, 8))
     block_k = min(block_k, _round_up(k, 8))
+    block_n, block_k = _audit_blocks("update", block_n, block_k, d,
+                                     x.dtype.itemsize,
+                                     hw_name=plan.hw if plan else None)
     k_tiles = _round_up(k, block_k) // block_k
 
     # 1) sort the 1-D assignment vector only (cheap: 4-byte keys).
@@ -154,25 +267,31 @@ def sort_inverse_update(x: Array, a: Array, *, k: int, block_n: int = 512,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("block_n", "block_k",
-                                             "interpret"))
-def flash_lloyd_step(x: Array, c: Array, *, block_n: int = 256,
-                     block_k: int = 256, interpret: bool | None = None
+                                             "plan", "interpret"))
+def flash_lloyd_step(x: Array, c: Array, *, block_n: int | None = None,
+                     block_k: int | None = None, plan=None,
+                     interpret: bool | None = None
                      ) -> tuple[Array, Array, Array, Array]:
     """Fused Lloyd statistics. x: (N, d), c: (K, d).
 
     Returns ``(assignments int32 (N,), sums f32 (K, d), counts f32 (K,),
     inertia f32 ())`` in a single pass over ``x`` — no argsort, no
     ``x_sorted`` gather, no second HBM stream. The ``(K_pad, d)`` f32
-    accumulator must be VMEM-resident; callers should consult
-    ``core.heuristics.choose_step_impl`` (falls back to the two-pass
-    assign + sort-inverse pipeline when it does not fit).
+    accumulator must be VMEM-resident; callers should consult the
+    ``KernelPlanner``'s step plan (``plan("step", ...).impl`` falls back
+    to the two-pass assign + sort-inverse pipeline when it does not fit).
     """
     if interpret is None:
         interpret = default_interpret()
     n, d = x.shape
     k = c.shape[0]
+    block_n, block_k = _resolve_blocks("step", (n, k, d), x.dtype,
+                                       block_n, block_k, plan, leg="fused")
     block_n = min(block_n, _round_up(n, 8))
     block_k = min(block_k, _round_up(k, 8))
+    block_n, block_k = _audit_blocks("fused", block_n, block_k, d,
+                                     x.dtype.itemsize, k=k,
+                                     hw_name=plan.hw if plan else None)
     xp = _pad_to(x, block_n, 0, 0)
     cp = _pad_to(c, block_k, 0, 0)
     a, s, cnt, j = _fl.flash_lloyd_raw(
@@ -186,9 +305,11 @@ def flash_lloyd_step(x: Array, c: Array, *, block_n: int = 256,
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=("l", "block_n", "block_k",
-                                             "interpret", "want_dists"))
-def flash_probe(q: Array, c: Array, *, l: int, block_n: int = 256,
-                block_k: int = 256, interpret: bool | None = None,
+                                             "plan", "interpret",
+                                             "want_dists"))
+def flash_probe(q: Array, c: Array, *, l: int, block_n: int | None = None,
+                block_k: int | None = None, plan=None,
+                interpret: bool | None = None,
                 want_dists: bool = True) -> tuple[Array, Array]:
     """Fused L-nearest-centroid probe. q: (N, d), c: (K, d), ``l <= K``.
 
@@ -210,8 +331,13 @@ def flash_probe(q: Array, c: Array, *, l: int, block_n: int = 256,
     if l < 1:
         raise ValueError(f"flash_probe needs l >= 1, got l={l}")
     l_pad = _round_up(l, 8)
+    block_n, block_k = _resolve_blocks("probe", (n, k, d, l), q.dtype,
+                                       block_n, block_k, plan)
     block_n = min(block_n, _round_up(n, 8))
     block_k = min(block_k, _round_up(k, 8))
+    block_n, block_k = _audit_blocks("probe", block_n, block_k, d,
+                                     q.dtype.itemsize, l=l,
+                                     hw_name=plan.hw if plan else None)
     qp = _pad_to(q, block_n, 0, 0)
     cp = _pad_to(c, block_k, 0, 0)
     idx, v = _fp.flash_probe_raw(qp, cp, l=l_pad, block_n=block_n,
@@ -226,9 +352,12 @@ def flash_probe(q: Array, c: Array, *, l: int, block_n: int = 256,
 
 
 @functools.partial(jax.jit, static_argnames=("l", "block_b", "block_c",
-                                             "interpret", "want_dists"))
-def flash_probe_grouped(q: Array, c: Array, *, l: int, block_b: int = 128,
-                        block_c: int = 256, interpret: bool | None = None,
+                                             "plan", "interpret",
+                                             "want_dists"))
+def flash_probe_grouped(q: Array, c: Array, *, l: int,
+                        block_b: int | None = None,
+                        block_c: int | None = None, plan=None,
+                        interpret: bool | None = None,
                         want_dists: bool = True) -> tuple[Array, Array]:
     """Per-query-candidate top-L scan. q: (B, d), c: (B, C, d).
 
@@ -249,8 +378,13 @@ def flash_probe_grouped(q: Array, c: Array, *, l: int, block_b: int = 128,
     if l < 1:
         raise ValueError(f"flash_probe_grouped needs l >= 1, got l={l}")
     l_pad = _round_up(l, 8)
+    block_b, block_c = _resolve_blocks("scan", (b, c_n, d, l), q.dtype,
+                                       block_b, block_c, plan)
     block_b = min(block_b, _round_up(b, 8))
     block_c = min(block_c, _round_up(c_n, 8))
+    block_b, block_c = _audit_blocks("scan", block_b, block_c, d,
+                                     q.dtype.itemsize, l=l,
+                                     hw_name=plan.hw if plan else None)
     qp = _pad_to(q, block_b, 0, 0)
     cp = _pad_to(_pad_to(c, block_b, 0, 0), block_c, 1, 0)
     idx, v = _fp.flash_probe_grouped_raw(
@@ -279,13 +413,15 @@ def sort_inverse_update_batched(x: Array, a: Array, *, k: int, **kw
 
 
 def centroid_stats(x: Array, a: Array, *, k: int, impl: str = "sort_inverse",
-                   block_n: int = 512, block_k: int = 256,
-                   interpret: bool | None = None) -> tuple[Array, Array]:
+                   block_n: int | None = None, block_k: int | None = None,
+                   plan=None, interpret: bool | None = None
+                   ) -> tuple[Array, Array]:
     """Centroid sufficient statistics ``(sums f32 (K, d), counts f32 (K,))``
     by any of the two-pass update dataflows."""
     if impl == "sort_inverse":
         return sort_inverse_update(x, a, k=k, block_n=block_n,
-                                   block_k=block_k, interpret=interpret)
+                                   block_k=block_k, plan=plan,
+                                   interpret=interpret)
     if impl == "scatter":
         return _ref.update_scatter_ref(x, a, k)
     if impl == "dense_onehot":
@@ -306,11 +442,11 @@ def finalize_centroids(s: Array, cnt: Array, c_prev: Array) -> Array:
 
 
 def centroid_update(x: Array, a: Array, c_prev: Array, *,
-                    impl: str = "sort_inverse", block_n: int = 512,
-                    block_k: int = 256, interpret: bool | None = None
-                    ) -> Array:
+                    impl: str = "sort_inverse", block_n: int | None = None,
+                    block_k: int | None = None, plan=None,
+                    interpret: bool | None = None) -> Array:
     """Full update stage with empty-cluster fallback (keeps old centroid)."""
     s, cnt = centroid_stats(x, a, k=c_prev.shape[0], impl=impl,
-                            block_n=block_n, block_k=block_k,
+                            block_n=block_n, block_k=block_k, plan=plan,
                             interpret=interpret)
     return finalize_centroids(s, cnt, c_prev)

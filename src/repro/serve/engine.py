@@ -184,6 +184,16 @@ class SearchEngine:
         self.queries_served = 0
         self.adds_since_refresh = 0
         self.refresh_count = 0
+        # Pin the kernel plans for the one geometry this engine serves —
+        # the padded (query_batch, d) shape at the index's current
+        # (k, cap) — at config time, so the first query (and every one
+        # after) dispatches without touching a chooser. Capacity growth
+        # from heavy inserts re-keys the index's own plan cache; re-pin
+        # is automatic on the next search.
+        self.pinned_plan = None
+        if hasattr(index, "plan_search"):
+            self.pinned_plan = index.plan_search(
+                self.scfg.query_batch, self.scfg.topk, self.scfg.nprobe)
 
     def search(self, q: Array) -> tuple[Array, Array]:
         """q: (B, d), any B <= query_batch -> (ids (B, topk), dists)."""

@@ -4,6 +4,12 @@ import os
 # fake-device flag in a separate process).
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+# Hermetic KernelPlanner: never read a stale ~/.cache plan file into the
+# suite (a pre-heuristics-change cache would silently serve old block
+# shapes) and never mutate the developer's real cache as a side effect.
+# Tests that exercise persistence pass an explicit tmp_path cache_path.
+os.environ.setdefault("REPRO_PLAN_CACHE", "off")
+
 import jax
 import numpy as np
 import pytest

@@ -220,3 +220,56 @@ def test_search_engine_pads_and_refreshes(built):
     assert eng.refresh_count == 1 and eng.adds_since_refresh == 0
     with pytest.raises(ValueError, match="query batch"):
         eng.search(x[:65])
+
+
+# --- planner integration: no chooser on the hot path -----------------------
+
+def test_search_zero_chooser_calls_after_first_query(built):
+    """Regression guard for the per-call chooser recompute on the search
+    hot path: for a repeated geometry every dispatch after the first is a
+    pure KernelPlanner cache hit (counter hook on the planner)."""
+    from repro.core import heuristics as H
+    from repro.core.plan import KernelPlanner
+    x, _, _ = built
+    planner = KernelPlanner(hw=H.TPU_V5E, persist=False)
+    index = IVFIndex.build(x, k=16, max_iters=4, planner=planner)
+    q = x[:48]
+    index.search(q, topk=5, nprobe=4)                   # first: plans
+    frozen = planner.chooser_calls
+    for _ in range(4):
+        index.search(q, topk=5, nprobe=4)
+    assert planner.chooser_calls == frozen
+    assert len(index._search_plans) == 1                # cached on the index
+    # a genuinely new geometry may plan again...
+    index.search(q, topk=5, nprobe=8)
+    grew = planner.chooser_calls
+    index.search(q, topk=5, nprobe=8)
+    assert planner.chooser_calls == grew                # ...exactly once
+    # repeated same-size adds replan nothing either
+    index.add(x[:100])
+    after_add = planner.chooser_calls
+    index.add(x[100:200])
+    assert planner.chooser_calls == after_add
+
+
+def test_search_engine_zero_chooser_calls(built):
+    """SearchEngine pins its (padded) batch geometry at config time: the
+    whole serve loop — search and insert traffic — runs chooser-free."""
+    from repro.core import heuristics as H
+    from repro.core.plan import KernelPlanner
+    from repro.serve.engine import SearchConfig, SearchEngine
+    x, _, _ = built
+    planner = KernelPlanner(hw=H.TPU_V5E, persist=False)
+    index = IVFIndex.build(x, k=16, max_iters=4, planner=planner)
+    eng = SearchEngine(index, SearchConfig(topk=5, nprobe=4,
+                                           query_batch=64,
+                                           refresh_every=1000))
+    assert eng.pinned_plan is not None                  # pinned at config
+    eng.add(x[:64])          # first insert: plans its batch bucket, and
+    eng.search(x[:10])       # may grow cap (re-keying the scan geometry)
+    frozen = planner.chooser_calls
+    for lo in range(0, 60, 20):                         # ragged real batches
+        eng.search(x[lo:lo + 17])
+    eng.add(x[64:128])       # same-bucket insert: replans nothing
+    eng.search(x[:32])
+    assert planner.chooser_calls == frozen
