@@ -9,6 +9,12 @@ Rows:
 - ``ivf_add_*``: marginal wall cost of one online ``add`` batch +
   ``refresh`` (assign + CSR append + O(K·d) re-center) vs the modeled
   cost of refitting the whole index from scratch.
+- ``ivf_search_sharded_*``: the sharded (cells-partitioned) search at
+  increasing nprobe — wall QPS when the host exposes >1 device (run
+  under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` for the
+  full two-stage path), plus the modeled per-batch cross-shard bytes
+  from ``core.parallel`` (O(b·L): two (value, index) top-L merges —
+  posting-list payloads never cross shards).
 
 Wall numbers are compiled-XLA CPU / interpret-mode Pallas (relative
 ordering only — see benchmarks/common.py); modeled numbers are the TPU
@@ -67,6 +73,35 @@ def rows() -> list[str]:
             f"ivf_search_nprobe{nprobe}_B{nq}", us,
             f"recall_at_{topk}={recall_at_k(ids, ids_ref):.3f};"
             f"modeled_tpu_us={(t_probe + t_scan) * 1e6:.1f}"))
+
+    # --- sharded search: QPS + modeled collective bytes vs nprobe ---------
+    from repro.core.parallel import (ParallelContext, make_host_mesh,
+                                     search_collective_bytes_model)
+    pctx = ParallelContext.for_mesh(make_host_mesh(1, len(jax.devices())))
+    p_k = pctx.n_k_shards
+    idx_sh = (IVFIndex.build(x, k=k, max_iters=8, pctx=pctx)
+              if p_k > 1 and k % p_k == 0 else None)
+    for nprobe in (2, 8, k):
+        if idx_sh is not None:
+            us = C.wall_us(
+                lambda qq, np_=nprobe: idx_sh.search(qq, topk=topk,
+                                                     nprobe=np_),
+                q, reps=3, warmup=1)
+            cb = idx_sh.search_collective_bytes(nq, topk, nprobe)
+            label = f"ivf_search_sharded_p{p_k}_nprobe{nprobe}_B{nq}"
+        else:
+            # single-device host: report the wire model for a
+            # hypothetical 8-way cells partition (wall = local search)
+            us = C.wall_us(
+                lambda qq, np_=nprobe: index.search(qq, topk=topk,
+                                                    nprobe=np_),
+                q, reps=3, warmup=1)
+            cb = search_collective_bytes_model(nq, nprobe, topk, k, 8)
+            label = f"ivf_search_sharded_model_p8_nprobe{nprobe}_B{nq}"
+        out.append(C.fmt_row(
+            label, us,
+            f"collective_bytes_per_batch={cb};"
+            f"bytes_per_query={cb / nq:.0f}"))
 
     # --- online add marginal cost vs refit --------------------------------
     r = 1024

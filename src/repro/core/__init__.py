@@ -3,7 +3,9 @@
 Public API:
   KMeans, KMeansConfig, KMeansState     — the composable module
   lloyd_step                            — single online iteration
-  make_distributed_kmeans               — shard_map multi-chip/pod variant
+  ParallelContext / build_mesh          — the one shard_map execution
+                                          layer + the one mesh helper
+  make_distributed_kmeans               — multi-chip/pod adapter over it
   ChunkedKMeans                         — out-of-core streaming driver
   StreamingKMeans / SufficientStats     — online/mini-batch driver + the
                                           shared reduction type
@@ -18,6 +20,9 @@ from repro.core.heuristics import Hardware, TPU_V5E, choose_blocks
 from repro.core.init import init_centroids, kmeans_plus_plus, random_init
 from repro.core.kmeans import (KMeans, KMeansConfig, KMeansState, lloyd_stats,
                                lloyd_step, make_kmeans_fn)
+from repro.core.parallel import (ParallelContext, build_mesh, make_host_mesh,
+                                 make_production_mesh, parse_mesh_flag,
+                                 shard_map_compat)
 from repro.core.plan import (KernelPlan, KernelPlanner, default_planner,
                              detect_hardware, set_default_planner)
 from repro.core.streaming import (StreamingKMeans, SufficientStats,
@@ -27,6 +32,8 @@ __all__ = [
     "KMeans", "KMeansConfig", "KMeansState", "lloyd_stats", "lloyd_step",
     "make_kmeans_fn",
     "make_distributed_kmeans", "shard_points", "ChunkedKMeans", "ChunkedStats",
+    "ParallelContext", "build_mesh", "make_host_mesh", "make_production_mesh",
+    "parse_mesh_flag", "shard_map_compat",
     "StreamingKMeans", "SufficientStats", "partial_fit_step",
     "KernelPlan", "KernelPlanner", "default_planner", "detect_hardware",
     "set_default_planner",

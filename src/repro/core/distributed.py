@@ -1,85 +1,55 @@
-"""Distributed flash-kmeans: shard_map over data and/or centroid axes.
+"""Distributed flash-kmeans — the thin adapter over ``core.parallel``.
+
+Historically this module owned the shard_map machinery; that now lives
+in ``core.parallel.ParallelContext``, the single execution layer every
+multi-device program (distributed Lloyd, streaming ``partial_fit``,
+sharded FlashIVF) is built on. This adapter keeps the stable public
+surface:
+
+- ``make_distributed_kmeans(mesh, cfg, data_axes, k_axis,
+  compress_pod_axis)`` — builds a ``ParallelContext`` and returns its
+  jitted Lloyd loop ``fit(x_sharded, c0) -> (centroids, assignments,
+  inertia)``;
+- ``shard_points`` — host-array placement along the data axes;
+- ``shard_map_compat`` — re-exported for older imports (new code should
+  go through ``ParallelContext.shard_map``).
 
 The centroid statistics ``(s_k, n_k)`` are *sufficient statistics* and
 associative, so the out-of-core chunk reduction (core.chunked), the
 streaming accumulator (core.streaming), the data-parallel multi-chip
 reduction here, and the multi-pod reduction are all the same tree:
 
-  per-shard Lloyd statistics (fused FlashLloyd or assign + sort-inverse,
-  per ``cfg.step_impl``)  ->  psum over data axes  ->  replicated
+  per-shard Lloyd statistics  ->  psum over data axes  ->  replicated
   ``finalize_centroids`` update.
 
-Two sharding modes compose:
+Two sharding modes compose (see ``ParallelContext`` for the details):
 
 - **N-sharding** (``data_axes``): points sharded; centroids replicated.
   One psum of (K, d) + (K,) per iteration — collective bytes are
-  O(K d), independent of N (this is what makes billion-point multi-pod
-  runs cheap). The per-shard statistics go through ``kmeans.lloyd_stats``
-  unchanged, so the fused single-pass FlashLloyd kernel runs distributed
-  exactly as it does on one chip.
-- **K-sharding** (``k_axis``): centroids sharded too (very large K). The
-  argmin is computed in two stages: local argmin over the centroid shard,
-  then a cross-shard (value, index) min-reduction via all_gather of the
-  per-shard minima — O(N_local · P_k) bytes, still ≪ materializing D.
-  Update statistics are computed *only for the locally-owned centroid
-  range* (ids outside the range are remapped to a dummy bucket), so the
-  update work is K-parallel with zero duplication. Because the global
-  assignment is only known *after* the cross-shard reduce, the fused
-  kernel (which bakes statistics into the assignment sweep) cannot apply
-  here; a fused-configured ``cfg`` transparently uses the sort-inverse
-  statistics kernel for this stats-only pass.
+  O(K d), independent of N. The fused single-pass FlashLloyd kernel
+  runs distributed exactly as it does on one chip.
+- **K-sharding** (``k_axis``): centroids sharded too (very large K).
+  The argmin runs in two stages (``ParallelContext.two_stage_assign``):
+  local argmin over the owned centroid shard, then a cross-shard
+  (value, index) min-merge — O(N_local · P_k) bytes, still ≪
+  materializing D. Update statistics are computed only for the owned
+  centroid range (``ParallelContext.owned_stats``). The fused kernel
+  cannot apply here (the global assignment is only known after the
+  merge); a fused-configured ``cfg`` transparently uses the
+  sort-inverse statistics kernel for this stats-only pass.
 """
 from __future__ import annotations
 
 from typing import Sequence
 
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
-from repro.core import kmeans as _km
 from repro.core.kmeans import KMeansConfig
-from repro.kernels import ops
+# shard_map_compat re-exported for backward compatibility
+from repro.core.parallel import ParallelContext, shard_map_compat  # noqa: F401
 
 Array = jax.Array
-
-
-def shard_map_compat(f, *, mesh, in_specs, out_specs):
-    """``jax.shard_map`` across jax versions.
-
-    jax >= 0.6 exports it at top level (replication checking spelled
-    ``check_vma``); 0.4.x only has ``jax.experimental.shard_map.shard_map``
-    (spelled ``check_rep``). Checking is disabled either way: pallas_call
-    outputs carry no replication/vma info.
-    """
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map as _shard_map
-    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                      check_rep=False)
-
-
-def _local_stats(x: Array, a: Array, k: int, cfg: KMeansConfig):
-    # planned at the *per-shard* shape: inside shard_map the trace sees
-    # the local N (and the local K range for K-sharding), so the
-    # KernelPlanner keys the plan on what each chip actually launches —
-    # one cached plan per shard geometry, not per global shape
-    blk = cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
-    return ops.centroid_stats(
-        x, a, k=k, impl=cfg.stats_only_update_impl(),
-        block_n=blk.update_block_n, block_k=blk.update_block_k,
-        interpret=cfg.interpret)
-
-
-def _local_assign(x: Array, c: Array, cfg: KMeansConfig):
-    blk = cfg.blocks_for(x.shape[0], x.shape[1], x.dtype.itemsize)
-    if cfg.assign_impl == "flash":
-        return ops.flash_assign(x, c, block_n=blk.assign_block_n,
-                                block_k=blk.assign_block_k,
-                                interpret=cfg.interpret)
-    from repro.kernels import ref
-    return ref.assign_ref(x, c)
 
 
 def make_distributed_kmeans(mesh: Mesh, cfg: KMeansConfig,
@@ -89,101 +59,14 @@ def make_distributed_kmeans(mesh: Mesh, cfg: KMeansConfig,
     """Build ``fit(x_sharded, c0) -> (centroids, assignments, inertia)``.
 
     ``x`` must be sharded P((*data_axes,), None); ``c0`` replicated (or
-    sharded P(k_axis, None) when ``k_axis`` is given). The Lloyd loop runs
-    entirely inside one shard_map'd program: one collective round per
-    iteration.
-
-    ``compress_pod_axis``: hierarchical reduction — full-precision psum
-    inside each pod, then error-feedback int8 exchange of the (K, d)
-    statistics across the (slow) pod axis. 8x wire-byte reduction on the
-    cross-pod links; EF keeps the iteration asymptotically exact.
+    sharded P(k_axis, None) when ``k_axis`` is given). The Lloyd loop
+    runs entirely inside one shard_map'd program: one collective round
+    per iteration. See ``ParallelContext.make_kmeans_fit``.
     """
-    data_axes = tuple(data_axes)
-
-    if k_axis is None:
-        intra_axes = tuple(a for a in data_axes if a != compress_pod_axis)
-
-        def shard_fn(x, c0):
-            from repro.optim import compression
-
-            def body(i, carry):
-                c, _, _, err_s, err_n = carry
-                a, s, n, j_local = _km.lloyd_stats(x, c, cfg)
-                if compress_pod_axis is None:
-                    s = jax.lax.psum(s, data_axes)
-                    n = jax.lax.psum(n, data_axes)
-                else:
-                    s = jax.lax.psum(s, intra_axes)
-                    n = jax.lax.psum(n, intra_axes)
-                    s, err_s = compression.ef_quantized_allreduce(
-                        s, err_s, compress_pod_axis)
-                    n, err_n = compression.ef_quantized_allreduce(
-                        n, err_n, compress_pod_axis)
-                inertia = jax.lax.psum(j_local, data_axes)
-                c_new = ops.finalize_centroids(s, n, c)
-                return c_new, a, inertia, err_s, err_n
-
-            zero_s = jnp.zeros((cfg.k, x.shape[1]), jnp.float32)
-            zero_n = jnp.zeros((cfg.k,), jnp.float32)
-            c, a, inertia, _, _ = jax.lax.fori_loop(
-                0, cfg.max_iters, body,
-                (c0, jnp.zeros((x.shape[0],), jnp.int32),
-                 jnp.array(jnp.inf, jnp.float32), zero_s, zero_n))
-            return c, a, inertia
-
-        fn = shard_map_compat(
-            shard_fn, mesh=mesh,
-            in_specs=(P(data_axes, None), P(None, None)),
-            out_specs=(P(None, None), P(data_axes), P()),
-        )
-        return jax.jit(fn)
-
-    # ---- K-sharded (2-D) variant -----------------------------------------
-    k_parts = mesh.shape[k_axis]
-    assert cfg.k % k_parts == 0, "K must divide the k_axis size"
-    k_local = cfg.k // k_parts
-
-    def shard_fn(x, c0_local):
-        rank = jax.lax.axis_index(k_axis)
-        lo = rank * k_local
-
-        def body(i, carry):
-            c_local, _, _ = carry
-            # stage 1: local argmin over this centroid shard
-            a_loc, m_loc = _local_assign(x, c_local, cfg=cfg)
-            # stage 2: cross-shard (value, index) min-reduce
-            m_all = jax.lax.all_gather(m_loc, k_axis)        # (Pk, N_loc)
-            a_all = jax.lax.all_gather(a_loc + lo, k_axis)   # (Pk, N_loc)
-            win = jnp.argmin(m_all, axis=0)                  # (N_loc,)
-            a_glob = jnp.take_along_axis(a_all, win[None], axis=0)[0]
-            inertia = jax.lax.psum(
-                jnp.sum(jnp.min(m_all, axis=0)), data_axes)
-            # stats only for the locally-owned centroid range
-            a_rel = a_glob - lo
-            in_range = jnp.logical_and(a_rel >= 0, a_rel < k_local)
-            a_masked = jnp.where(in_range, a_rel, k_local).astype(jnp.int32)
-            s, n = _local_stats(x, a_masked, k_local + 1, cfg=cfg)
-            s, n = s[:k_local], n[:k_local]
-            s = jax.lax.psum(s, data_axes)
-            n = jax.lax.psum(n, data_axes)
-            c_new = ops.finalize_centroids(s, n, c_local)
-            return c_new, a_glob.astype(jnp.int32), inertia
-
-        c, a, inertia = jax.lax.fori_loop(
-            0, cfg.max_iters, body,
-            (c0_local, jnp.zeros((x.shape[0],), jnp.int32),
-             jnp.array(jnp.inf, jnp.float32)))
-        return c, a, inertia
-
-    fn = shard_map_compat(
-        shard_fn, mesh=mesh,
-        in_specs=(P(data_axes, None), P(k_axis, None)),
-        out_specs=(P(k_axis, None), P(data_axes), P()),
-    )
-    return jax.jit(fn)
+    pctx = ParallelContext(mesh, data_axes=data_axes, k_axis=k_axis)
+    return pctx.make_kmeans_fit(cfg, compress_pod_axis=compress_pod_axis)
 
 
 def shard_points(mesh: Mesh, x, data_axes: Sequence[str] = ("data",)):
     """Place a host array onto the mesh, sharded along N."""
-    return jax.device_put(
-        x, NamedSharding(mesh, P(tuple(data_axes), None)))
+    return ParallelContext(mesh, data_axes=data_axes).shard_points(x)

@@ -188,17 +188,31 @@ class StreamingKMeans:
     batches before the k-means++ draw is the standard fix — the buffered
     points are folded into the statistics on bootstrap, so every point
     still counts exactly once).
+
+    ``pctx`` (a ``core.parallel.ParallelContext``) turns ``partial_fit``
+    /``update`` data-parallel: each batch is padded to a shard multiple,
+    sharded over the mesh's point axes, reduced per-shard, and merged
+    with **one O(K·d) psum per mini-batch** — centroids and running
+    stats stay replicated, so the wire cost is independent of both the
+    stream length and the batch size. Padding rows are masked out of the
+    statistics (a ragged last shard — or a shard made entirely of
+    padding — contributes exact zeros, never NaN).
     """
 
     def __init__(self, cfg: KMeansConfig, *, decay: float = 1.0,
                  local_iters: int = 1, seed: int = 0,
-                 init_size: int | None = None):
+                 init_size: int | None = None, pctx=None):
         if not (0.0 < decay <= 1.0):
             raise ValueError(f"decay must be in (0, 1], got {decay}")
         self.cfg = cfg
         self.decay = float(decay)
         self.local_iters = int(local_iters)
         self.init_size = init_size
+        self.pctx = pctx
+        if pctx is not None and pctx.k_axis is not None:
+            raise ValueError(
+                "StreamingKMeans is data-parallel only; use a "
+                "ParallelContext without a k_axis (centroids replicate)")
         self.centroids: Array | None = None
         self.stats: SufficientStats | None = None
         self.n_batches = 0
@@ -206,14 +220,21 @@ class StreamingKMeans:
         self._init_buf: list = []
         self._pending: Array | None = None
         self._key = jax.random.PRNGKey(seed)
-        self._partial = jax.jit(functools.partial(
-            partial_fit_step, cfg=cfg, decay=self.decay,
-            local_iters=self.local_iters))
+        if pctx is not None:
+            self._partial = pctx.make_partial_fit(
+                cfg, decay=self.decay, local_iters=self.local_iters)
+        else:
+            self._partial = jax.jit(functools.partial(
+                partial_fit_step, cfg=cfg, decay=self.decay,
+                local_iters=self.local_iters))
         # update(): append-only — no decay, single assignment pass (same
         # computation as _partial at the default config; share the jit
         # cache instead of compiling it twice)
         if self.decay == 1.0 and self.local_iters == 1:
             self._append = self._partial
+        elif pctx is not None:
+            self._append = pctx.make_partial_fit(cfg, decay=1.0,
+                                                 local_iters=1)
         else:
             self._append = jax.jit(functools.partial(
                 partial_fit_step, cfg=cfg, decay=1.0, local_iters=1))
@@ -243,6 +264,19 @@ class StreamingKMeans:
         self._pending = batch
         return True
 
+    def _run_step(self, fn, batch: Array):
+        """Dispatch one step — single-device, or the shard_map'd twin."""
+        if self.pctx is None:
+            return fn(batch, self.centroids, self.stats)
+        from jax.sharding import PartitionSpec as P
+        x_pad, mask, n = self.pctx.pad_points(batch)
+        x_pad = self.pctx.shard_points(x_pad)
+        mask = self.pctx.put(mask, P(self.pctx.data_axes))
+        c, s, cnt, j, a, bj = fn(x_pad, mask, self.centroids,
+                                 self.stats.sums, self.stats.counts,
+                                 self.stats.inertia)
+        return c, SufficientStats(s, cnt, j), a[:n], bj
+
     def partial_fit(self, batch: Array) -> "StreamingKMeans":
         """Fold one mini-batch into the model (decayed warm-start step)."""
         batch = self._cast(batch)
@@ -252,7 +286,7 @@ class StreamingKMeans:
                 return self
             batch, self._pending = self._pending, None
         self.centroids, self.stats, _, self.last_batch_inertia = \
-            self._partial(batch, self.centroids, self.stats)
+            self._run_step(self._partial, batch)
         return self
 
     def update(self, x_new: Array) -> Array:
@@ -274,7 +308,7 @@ class StreamingKMeans:
             self._bootstrap(x_new)
             x_new, self._pending = self._pending, None
         self.centroids, self.stats, a, self.last_batch_inertia = \
-            self._append(x_new, self.centroids, self.stats)
+            self._run_step(self._append, x_new)
         self.n_batches += 1
         return a
 

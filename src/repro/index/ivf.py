@@ -34,6 +34,21 @@ coordinate so their distances are astronomically large but never NaN/inf
 inside the kernel's crossterm — they can only surface when a query
 probes fewer valid candidates than ``topk``, in which case the returned
 id is an honest ``-1``.
+
+**Sharded FlashIVF** (``pctx`` — a ``core.parallel.ParallelContext``):
+cells are partitioned over the mesh's ``cells`` axis — each shard owns
+``K / P_k`` centroids *and their posting lists* — and the whole search
+runs inside one shard_map'd program:
+
+  local ``flash_probe`` over owned centroids  ->  cross-shard top-L
+  merge (O(b·L) bytes)  ->  local grouped scan of the *owned* probed
+  cells' buckets  ->  global top-k merge (O(b·topk) bytes).
+
+Posting-list payloads never cross shards; the only wire traffic is the
+two (value, index) list merges. ``build`` trains through the same
+context (data-parallel and/or two-stage K-sharded Lloyd), and
+``add``/``refresh`` route the pending ``SufficientStats`` through the
+same O(K·d) psum tree as every other driver.
 """
 from __future__ import annotations
 
@@ -42,6 +57,7 @@ import functools
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from repro.core import plan as _plan
 from repro.core.chunked import ChunkedKMeans
@@ -92,6 +108,29 @@ def recall_at_k(ids, ids_ref) -> float:
         for a, b in zip(ids, ids_ref)]))
 
 
+def _train_sharded(pctx, cfg: KMeansConfig, key, x: Array
+                   ) -> tuple[Array, Array, Array]:
+    """Distributed build-time training: the ParallelContext Lloyd loop
+    (one O(K·d) psum per iteration; two-stage argmin under K-sharding)
+    followed by one two-stage assignment pass under the final centroids
+    — the same per-shard dataflow the online ``add`` path uses. Ragged
+    N is padded to a data-shard multiple and masked out of the
+    statistics. Returns ``(centroids, assignments, min_sq_dists)``."""
+    n = x.shape[0]
+    c0 = init_centroids(key, x, cfg.k, cfg.init)
+    x_pad, mask, _ = pctx.pad_points(x)
+    ragged = x_pad.shape[0] != n
+    fit = pctx.make_kmeans_fit(cfg, masked=ragged)
+    xs = pctx.shard_points(x_pad)
+    c0s = pctx.shard_centroids(c0)
+    if ragged:
+        c, _, _ = fit(xs, pctx.put(mask, P(pctx.data_axes)), c0s)
+    else:
+        c, _, _ = fit(xs, c0s)
+    a, m = pctx.make_assign(cfg)(xs, c)
+    return c, a[:n], m[:n]
+
+
 @functools.partial(jax.jit, static_argnames=("topk", "nprobe", "bqn", "bqk",
                                              "bsb", "bsc", "interpret"))
 def _ivf_search(q: Array, centroids: Array, buckets: Array,
@@ -131,12 +170,16 @@ class IVFIndex:
 
     def __init__(self, centroids: Array, capacity: int, *,
                  interpret: bool | None = None,
-                 planner: "_plan.KernelPlanner | None" = None):
+                 planner: "_plan.KernelPlanner | None" = None,
+                 pctx=None):
         k, d = centroids.shape
         self.centroids = centroids
         self.k, self.d = k, d
         self.cap = max(8, _round_up(capacity, 8))
         self.interpret = interpret
+        self.pctx = pctx
+        if pctx is not None and pctx.k_axis is not None:
+            pctx.k_local(k)   # raises unless K divides the cells axis
         dt = centroids.dtype
         self.buckets = jnp.full((k, self.cap, d), _PAD_COORD, dt)
         self.bucket_ids = jnp.full((k, self.cap), -1, jnp.int32)
@@ -149,10 +192,47 @@ class IVFIndex:
         # all block shapes come from the planner, per *observed* shape
         # bucket — assignment blocks at each add batch's size, search
         # blocks once per query geometry (cached below; repeated traffic
-        # is a pure cache hit, zero chooser calls)
+        # is a pure cache hit, zero chooser calls). Under a k-sharded
+        # pctx every plan is taken at the *per-shard* shapes (K/P_k
+        # centroids, the owned candidate block), not the global ones.
         self.planner = planner if planner is not None \
             else _plan.default_planner()
         self._search_plans: dict[tuple, tuple[int, int, int, int]] = {}
+        self._sharded_search: dict[tuple, object] = {}
+        self._add_programs: dict[int, object] = {}
+        self._place()
+
+    # ------------------------------------------------------------------
+    # sharding plumbing (no-ops without a k-sharded ParallelContext)
+    # ------------------------------------------------------------------
+
+    @property
+    def _k_sharded(self) -> bool:
+        return self.pctx is not None and self.pctx.k_axis is not None
+
+    def _shard_cfg(self) -> KMeansConfig:
+        """The config the sharded assign/stats programs plan with."""
+        return KMeansConfig(k=self.k, interpret=self.interpret,
+                            planner=self.planner)
+
+    def _place(self) -> None:
+        """Pin the index state onto the mesh: each shard owns K/P_k
+        cells — centroids, padded buckets, ids, counts and the running
+        ``SufficientStats`` slices all partitioned over the cells axis.
+        Host-side mutations (append / grow / refresh) call this again so
+        placement survives functional updates."""
+        if not self._k_sharded:
+            return
+        pctx, ka = self.pctx, self.pctx.k_axis
+        self.centroids = pctx.put(self.centroids, P(ka, None))
+        self.buckets = pctx.put(self.buckets, P(ka, None, None))
+        self.bucket_ids = pctx.put(self.bucket_ids, P(ka, None))
+        self.counts = pctx.put(self.counts, P(ka))
+        place = lambda st: SufficientStats(
+            pctx.put(st.sums, P(ka, None)), pctx.put(st.counts, P(ka)),
+            st.inertia)
+        self.stats = place(self.stats)
+        self._pending = place(self._pending)
 
     # ------------------------------------------------------------------
     # construction
@@ -163,13 +243,26 @@ class IVFIndex:
               tol: float = 0.0, step_impl: str = "auto",
               capacity: int | None = None, chunk_size: int | None = None,
               seed: int = 0, interpret: bool | None = None,
-              planner: "_plan.KernelPlanner | None" = None) -> "IVFIndex":
+              planner: "_plan.KernelPlanner | None" = None,
+              pctx=None) -> "IVFIndex":
         """Train coarse centroids and invert the corpus into posting lists.
 
         ``x``: (N, d) array — or, with ``chunk_size`` set, a host numpy
         array / chunk factory handled out-of-core by ``ChunkedKMeans``
         (training *and* inversion then stream in chunks; device memory
         stays O(chunk + K·cap·d)).
+
+        ``pctx``: train and serve on a mesh — points sharded over the
+        data axes (one O(K·d) psum per Lloyd iteration, the same
+        ``tol`` early-stop rule as single-device), cells (and their
+        posting lists) partitioned over the cells axis, and the
+        build-time assignment computed by the same two-stage argmin the
+        sharded search uses. A ragged N is padded to a shard multiple
+        and masked out of the statistics. With ``chunk_size`` set the
+        *training* stays the single-device out-of-core ``ChunkedKMeans``
+        loop (the corpus doesn't fit on the mesh by assumption); the
+        mesh applies to everything after it — the per-chunk ``add``
+        inversion passes, placement, and serving.
         """
         cfg = KMeansConfig(k=k, max_iters=max_iters, init=init, tol=tol,
                            step_impl=step_impl, interpret=interpret,
@@ -177,16 +270,20 @@ class IVFIndex:
         key = jax.random.PRNGKey(seed)
         if chunk_size is None:
             xj = jnp.asarray(x)
-            centroids = KMeans(cfg).fit(key, xj).centroids
-            blk = cfg.blocks_for(xj.shape[0], xj.shape[1],
-                                 xj.dtype.itemsize)
-            a, m = ops.flash_assign(xj, centroids.astype(xj.dtype),
-                                    block_n=blk.assign_block_n,
-                                    block_k=blk.assign_block_k,
-                                    interpret=interpret)
+            if pctx is None:
+                centroids = KMeans(cfg).fit(key, xj).centroids
+                blk = cfg.blocks_for(xj.shape[0], xj.shape[1],
+                                     xj.dtype.itemsize)
+                a, m = ops.flash_assign(xj, centroids.astype(xj.dtype),
+                                        block_n=blk.assign_block_n,
+                                        block_k=blk.assign_block_k,
+                                        interpret=interpret)
+            else:
+                centroids, a, m = _train_sharded(pctx, cfg, key, xj)
             cap = capacity if capacity is not None else int(
                 jnp.max(jnp.bincount(a, length=k)))
-            index = cls(centroids, cap, interpret=interpret, planner=planner)
+            index = cls(centroids, cap, interpret=interpret, planner=planner,
+                        pctx=pctx)
             index._fold(xj, a, m)
         else:
             # out-of-core: ChunkedKMeans trains (init from the first
@@ -196,13 +293,14 @@ class IVFIndex:
             c0 = init_centroids(key, jnp.asarray(first), k, init)
             centroids, _ = driver.fit(x, c0)
             index = cls(centroids, capacity if capacity is not None else 8,
-                        interpret=interpret, planner=planner)
+                        interpret=interpret, planner=planner, pctx=pctx)
             for chunk in driver._chunks(x):
                 index.add(chunk)
         # build-time evidence is the committed baseline, not drift:
         # start refresh() semantics from a clean pending slate
         index.stats = index.stats.merge(index._pending)
         index._pending = SufficientStats.zero(k, index.d)
+        index._place()
         return index
 
     # ------------------------------------------------------------------
@@ -217,10 +315,17 @@ class IVFIndex:
         write is a disjoint vectorized scatter — and the batch sufficient
         statistics are folded into the pending ``SufficientStats`` so the
         next ``refresh`` can re-center without touching the points again.
+
+        Under a ``pctx`` the batch is sharded over the data axes, the
+        cells are found by the two-stage argmin, and the pending
+        statistics arrive pre-reduced through the same O(K·d) psum tree
+        as every other driver — already partitioned over the cells axis.
         """
         x_new = jnp.asarray(x_new, self.buckets.dtype)
         if x_new.shape[0] == 0:
             return jnp.zeros((0,), jnp.int32)
+        if self.pctx is not None:
+            return self._add_sharded(x_new)
         # planned per observed batch-shape bucket (not a magic batch
         # size): a stream of same-bucket adds never replans
         blk = self._batch_blocks(x_new.shape[0])
@@ -230,6 +335,47 @@ class IVFIndex:
                                 interpret=self.interpret)
         self._fold(x_new, a, m)
         return a
+
+    def _add_sharded(self, x_new: Array) -> Array:
+        """Sharded add: two-stage assign + per-shard owned statistics,
+        one psum over the data axes — then the host-side CSR append."""
+        pctx = self.pctx
+        x_pad, mask, n = pctx.pad_points(x_new)
+        prog = self._add_programs.get(x_pad.shape[0])
+        if prog is None:
+            prog = self._make_add_program()
+            self._add_programs[x_pad.shape[0]] = prog
+        a, s, cnt, j = prog(pctx.shard_points(x_pad),
+                            pctx.put(mask, P(pctx.data_axes)),
+                            self.centroids)
+        a = a[:n]
+        self._pending = self._pending.merge(SufficientStats(s, cnt, j))
+        self._append(x_new, a)
+        self._place()
+        return a
+
+    def _make_add_program(self):
+        """One jitted shard_map'd assign+stats pass per padded batch
+        shape (cached): the KernelPlanner is consulted at the per-shard
+        batch/centroid shapes the program actually launches."""
+        pctx, cfg, k = self.pctx, self._shard_cfg(), self.k
+        ka = pctx.k_axis
+
+        def shard_fn(x, mask, c_local):
+            a, m = pctx.two_stage_assign(x, c_local, cfg)
+            s, cnt = pctx.owned_stats(x, a, k, cfg, mask=mask)
+            j = jax.lax.psum(jnp.sum(jnp.where(mask, m, 0.0)),
+                             pctx.data_axes)
+            return a, s, cnt, j
+
+        fn = pctx.spmd(
+            shard_fn,
+            in_specs=(pctx.data_spec, P(pctx.data_axes),
+                      pctx.centroid_spec),
+            out_specs=(P(pctx.data_axes),
+                       P(ka, None) if ka else P(None, None),
+                       P(ka) if ka else P(None), P()))
+        return jax.jit(fn)
 
     def _batch_blocks(self, n: int):
         """Assign/update tiles for an ``n``-row batch (planner-cached)."""
@@ -258,6 +404,7 @@ class IVFIndex:
         self.stats = self.stats.scale(decay).merge(self._pending)
         self._pending = SufficientStats.zero(self.k, self.d)
         self.centroids = self.stats.finalize(self.centroids)
+        self._place()   # merge/finalize are elementwise over K: re-pin
         return self
 
     def _append(self, x: Array, a: Array) -> None:
@@ -305,17 +452,32 @@ class IVFIndex:
         per-call chooser recompute this method replaces can never return
         to the hot path. Serving layers with a fixed padded batch shape
         (``serve.engine.SearchEngine``) call this once at config time.
+
+        Under a k-sharded ``pctx`` both stages are planned at the
+        *per-shard* shapes each chip actually launches — K/P_k owned
+        centroids and the owned candidate block — so plans stay correct
+        under partitioning (a plan taken at the global shapes would
+        size tiles for a kernel that never runs).
         """
         nprobe = min(nprobe, self.k)
-        geom = (int(b), nprobe, int(topk), self.cap)
+        if self._k_sharded:
+            kl = self.pctx.k_local(self.k)
+            ll = min(nprobe, kl)           # max owned cells one query probes
+            li = min(topk, ll * self.cap)  # local result-list length
+            pd = self.pctx.n_data_shards   # queries are data-sharded too
+            bl = max(1, ((int(b) + pd - 1) // pd))
+            geom = (int(b), nprobe, int(topk), self.cap, self.pctx.n_k_shards)
+            probe_shape = (bl, kl, self.d, ll)
+            scan_shape = (bl, ll * self.cap, self.d, li)
+        else:
+            geom = (int(b), nprobe, int(topk), self.cap)
+            probe_shape = (b, self.k, self.d, nprobe)
+            scan_shape = (b, nprobe * self.cap, self.d, topk)
         plans = self._search_plans.get(geom)
         if plans is None:
             dt = self.buckets.dtype
-            probe = self.planner.plan("probe", (b, self.k, self.d, nprobe),
-                                      dt)
-            scan = self.planner.plan("scan",
-                                     (b, nprobe * self.cap, self.d, topk),
-                                     dt)
+            probe = self.planner.plan("probe", probe_shape, dt)
+            scan = self.planner.plan("scan", scan_shape, dt)
             plans = (*probe.blocks, *scan.blocks)
             self._search_plans[geom] = plans
         return plans
@@ -335,10 +497,99 @@ class IVFIndex:
             raise ValueError(
                 f"topk={topk} exceeds the probed candidate pool "
                 f"nprobe*cap={cand}; raise nprobe or capacity")
+        if self._k_sharded:
+            return self._search_sharded(q, topk, nprobe)
         bqn, bqk, bsb, bsc = self.plan_search(q.shape[0], topk, nprobe)
         return _ivf_search(q, self.centroids, self.buckets, self.bucket_ids,
                            topk=topk, nprobe=nprobe, bqn=bqn, bqk=bqk,
                            bsb=bsb, bsc=bsc, interpret=self.interpret)
+
+    def _search_sharded(self, q: Array, topk: int, nprobe: int
+                        ) -> tuple[Array, Array]:
+        """Two-stage sharded search (one shard_map'd program, cached per
+        geometry). Queries are sharded over the data axes (each data
+        shard searches its slice — no replicated compute; a ragged batch
+        is padded and sliced back); per-batch cross-shard traffic is two
+        (value, index) top-L merges over the cells axis —
+        ``pctx.search_collective_bytes`` models it; the posting-list
+        payloads never leave their owning shard."""
+        pctx = self.pctx
+        b = q.shape[0]
+        pd = pctx.n_data_shards
+        b_pad = ((b + pd - 1) // pd) * pd
+        if b_pad != b:
+            q = jnp.pad(q, ((0, b_pad - b), (0, 0)))
+        key = (b_pad, nprobe, topk, self.cap)
+        prog = self._sharded_search.get(key)
+        if prog is None:
+            prog = self._make_sharded_search(b_pad, topk, nprobe)
+            self._sharded_search[key] = prog
+        ids, dists = prog(pctx.shard_points(q), self.centroids,
+                          self.buckets, self.bucket_ids)
+        return ids[:b], dists[:b]
+
+    def _make_sharded_search(self, b_pad: int, topk: int, nprobe: int):
+        pctx = self.pctx
+        ka = pctx.k_axis
+        k_local = pctx.k_local(self.k)
+        cap, d = self.cap, self.d
+        ll = min(nprobe, k_local)       # a query probes <= ll owned cells
+        li = min(topk, ll * cap)        # local result-list length
+        bqn, bqk, bsb, bsc = self.plan_search(b_pad, topk, nprobe)
+        interpret = self.interpret
+
+        def shard_fn(q, c_local, buckets, bucket_ids):
+            bl = q.shape[0]             # per-data-shard query slice
+            # stage 1: local top-ll probe over the owned centroids, then
+            # the cross-shard top-nprobe merge — O(b·ll) wire bytes
+            idx, val = ops.flash_probe(q, c_local.astype(q.dtype), l=ll,
+                                       block_n=bqn, block_k=bqk,
+                                       interpret=interpret,
+                                       want_dists=False)
+            lo = jax.lax.axis_index(ka) * k_local
+            gcell, _ = pctx.merge_topl(idx + lo, val, nprobe)  # (bl, nprobe)
+            # stage 2: compact this shard's owned probed cells (stable:
+            # global probe order preserved) into a fixed (bl, ll) block;
+            # non-owned slots point at the padding cell k_local
+            rel = gcell - lo
+            owned = jnp.logical_and(rel >= 0, rel < k_local)
+            pos = jax.lax.broadcasted_iota(jnp.int32, (bl, nprobe), 1)
+            order = jnp.argsort(jnp.where(owned, pos, nprobe),
+                                axis=1)[:, :ll]
+            cell = jnp.take_along_axis(rel, order, axis=1)
+            ok = jnp.take_along_axis(owned, order, axis=1)
+            cell = jnp.where(ok, cell, k_local)
+            bpad = jnp.concatenate(
+                [buckets, jnp.full((1, cap, d), _PAD_COORD,
+                                   buckets.dtype)], axis=0)
+            ipad = jnp.concatenate(
+                [bucket_ids, jnp.full((1, cap), -1, jnp.int32)], axis=0)
+            cand_x = bpad[cell].reshape(bl, ll * cap, d)
+            cand_ids = ipad[cell].reshape(bl, ll * cap)
+            # stage 3: local grouped scan of the owned buckets (payloads
+            # stay on-shard), then the global top-k merge — O(b·topk).
+            # The tie key is each candidate's *global probe-rank-major*
+            # position — exactly the candidate-axis position the
+            # single-device scan sees it at — so equal distances break
+            # identically to `jax.lax.top_k` over the reference
+            # candidate block, not toward the lower shard rank.
+            lidx, lval = ops.flash_probe_grouped(
+                q, cand_x, l=li, block_b=bsb, block_c=bsc,
+                interpret=interpret, want_dists=False)
+            ids_loc = jnp.take_along_axis(cand_ids, lidx, axis=1)
+            gpos = (jnp.take_along_axis(order, lidx // cap, axis=1) * cap
+                    + lidx % cap)
+            gids, gval = pctx.merge_topl(ids_loc, lval, topk, tie=gpos)
+            q32 = q.astype(jnp.float32)
+            gval = gval + jnp.sum(q32 * q32, axis=-1, keepdims=True)
+            return gids, jnp.maximum(gval, 0.0)
+
+        fn = pctx.spmd(
+            shard_fn,
+            in_specs=(pctx.data_spec, P(ka, None), P(ka, None, None),
+                      P(ka, None)),
+            out_specs=(P(pctx.data_axes, None), P(pctx.data_axes, None)))
+        return jax.jit(fn)
 
     def search_brute(self, q, topk: int = 10) -> tuple[Array, Array]:
         """Dense brute-force reference over every indexed vector (the
@@ -363,9 +614,21 @@ class IVFIndex:
                                    jnp.cumsum(self.counts)]).astype(jnp.int32)
         return ids, offsets
 
+    def search_collective_bytes(self, b: int, topk: int = 10,
+                                nprobe: int = 8) -> int:
+        """Modeled per-batch cross-shard wire bytes of ``search`` (0 on a
+        single device) — see ``ParallelContext.search_collective_bytes``
+        and DESIGN.md "Parallel layer"."""
+        if not self._k_sharded:
+            return 0
+        return self.pctx.search_collective_bytes(
+            b, min(nprobe, self.k), topk, self.k, cap=self.cap, d=self.d)
+
     def __len__(self) -> int:
         return self.n_total
 
     def __repr__(self) -> str:
+        shard = (f", cells_sharded x{self.pctx.n_k_shards}"
+                 if self._k_sharded else "")
         return (f"IVFIndex(k={self.k}, d={self.d}, n={self.n_total}, "
-                f"cap={self.cap})")
+                f"cap={self.cap}{shard})")

@@ -1,24 +1,14 @@
-"""Production mesh factory.
+"""Production mesh factory — thin delegation to ``core.parallel``.
 
-A function (NOT a module-level constant) so importing this module never
-touches jax device state — the dry-run sets the fake-device XLA flag
-before first jax init, and unit tests keep seeing 1 device.
+All mesh construction in the repo routes through
+``core.parallel.build_mesh`` (one helper, one place that touches jax
+device state); these wrappers only exist so launchers keep a stable
+import path. Functions (NOT module-level constants) so importing this
+module never touches jax device state — the dry-run sets the
+fake-device XLA flag before first jax init, and unit tests keep seeing
+1 device.
 """
 from __future__ import annotations
 
-import jax
-
-
-def make_production_mesh(*, multi_pod: bool = False):
-    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips)."""
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
-
-
-def make_host_mesh(data: int = 1, model: int = 1):
-    """Small mesh over whatever devices exist (tests / local runs)."""
-    n = len(jax.devices())
-    data = min(data, n)
-    model = max(1, min(model, n // max(data, 1)))
-    return jax.make_mesh((data, model), ("data", "model"))
+from repro.core.parallel import (build_mesh, make_host_mesh,  # noqa: F401
+                                 make_production_mesh, parse_mesh_flag)

@@ -6,6 +6,10 @@ plus a FlashIVF vector-search serving mode.
 
   PYTHONPATH=src python -m repro.launch.serve --mode search \
       --n 20000 --d 64 --kc 64 --queries 512 --topk 10 --nprobe 8
+
+  # sharded serving: 1-way data x 8-way cells over 8 (fake) devices
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.serve --mode search --mesh 1x8
 """
 from __future__ import annotations
 
@@ -15,6 +19,7 @@ import time
 import jax
 
 from repro.configs.base import get_config
+from repro.core.parallel import ParallelContext, parse_mesh_flag
 from repro.models import model as M
 from repro.serve.engine import Engine, SearchConfig, SearchEngine, ServeConfig
 
@@ -26,10 +31,12 @@ def _serve_lm(args) -> None:
     key = jax.random.PRNGKey(args.seed)
     params, _ = M.init_model(key, cfg,
                              max_pos=args.prompt_len + args.gen + 64)
+    mesh = parse_mesh_flag(args.mesh) if args.mesh else None
     engine = Engine(cfg, params,
                     ServeConfig(max_seq=args.prompt_len + args.gen + 8,
                                 mode=args.mode,
-                                temperature=args.temperature))
+                                temperature=args.temperature),
+                    mesh=mesh)
 
     tokens = jax.random.randint(jax.random.fold_in(key, 1),
                                 (args.batch, args.prompt_len), 0,
@@ -52,8 +59,20 @@ def _serve_lm(args) -> None:
 
 def _serve_search(args) -> None:
     """Build a FlashIVF index over a synthetic clustered corpus and serve
-    batched queries; reports build wall, QPS, and recall@topk vs brute."""
+    batched queries; reports build wall, QPS, and recall@topk vs brute.
+
+    With ``--mesh DATAxCELLS`` the index is built and served through a
+    ``ParallelContext``: build is data-parallel (O(K·d) psum per Lloyd
+    iteration), cells + posting lists are partitioned over the cells
+    axis, and every query batch runs the two-stage sharded search —
+    the modeled cross-shard bytes per batch are reported alongside QPS.
+    """
     from repro.index import IVFIndex, recall_at_k
+
+    pctx = None
+    if args.mesh:
+        pctx = ParallelContext.for_mesh(parse_mesh_flag(args.mesh))
+        print(f"sharded serving: {pctx.describe()}")
 
     key = jax.random.PRNGKey(args.seed)
     kc, ka, kn, kq = jax.random.split(key, 4)
@@ -62,7 +81,8 @@ def _serve_search(args) -> None:
     x = centers[lbl] + 0.4 * jax.random.normal(kn, (args.n, args.d))
 
     t0 = time.time()
-    index = IVFIndex.build(x, k=args.kc, max_iters=args.kmeans_iters)
+    index = IVFIndex.build(x, k=args.kc, max_iters=args.kmeans_iters,
+                           pctx=pctx)
     jax.block_until_ready(index.buckets)
     t_build = time.time() - t0
 
@@ -84,12 +104,21 @@ def _serve_search(args) -> None:
           f"nprobe={args.nprobe} topk={args.topk}")
     print(f"build {t_build:.2f}s ({args.n / t_build:.0f} pts/s); "
           f"serve {qps:.0f} qps; recall@{args.topk}={recall:.3f}")
+    if pctx is not None:
+        cb = index.search_collective_bytes(args.queries, args.topk,
+                                           args.nprobe)
+        print(f"collective bytes/batch (modeled, O(b*L)): {cb}")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mode", default="dense",
                     choices=["dense", "clustered", "search"])
+    ap.add_argument("--mesh", default=None,
+                    help="serve on a DATAxCELLS host mesh (e.g. 1x8): "
+                         "sharded FlashIVF for --mode search, model mesh "
+                         "for dense/clustered (built via the one "
+                         "core.parallel helper)")
     # LM serving
     ap.add_argument("--arch")
     ap.add_argument("--reduced", action="store_true")

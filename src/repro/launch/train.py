@@ -21,7 +21,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs.base import SHAPES, ShapeSpec, get_config
 from repro.data.pipeline import pipeline_for
 from repro.launch import specs as SP
-from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.mesh import (make_host_mesh, make_production_mesh,
+                               parse_mesh_flag)
 from repro.models import model as M
 from repro.optim import adamw
 from repro.train.train_step import make_train_step
@@ -40,6 +41,9 @@ def main() -> None:
     ap.add_argument("--seq", type=int, default=0, help="override seq len")
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--mesh", default=None,
+                    help="explicit DATAxMODEL host mesh, e.g. 2x4 "
+                         "(overrides --production-mesh)")
     ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
     ap.add_argument("--ckpt-every", type=int, default=25)
     ap.add_argument("--lr", type=float, default=3e-4)
@@ -56,8 +60,11 @@ def main() -> None:
             global_batch=args.batch or shape.global_batch,
             seq_len=args.seq or shape.seq_len)
 
-    mesh = (make_production_mesh(multi_pod=args.multi_pod)
-            if args.production_mesh else make_host_mesh())
+    if args.mesh:
+        mesh = parse_mesh_flag(args.mesh)
+    else:
+        mesh = (make_production_mesh(multi_pod=args.multi_pod)
+                if args.production_mesh else make_host_mesh())
     print(f"arch={cfg.name} params~{cfg.n_params()/1e6:.1f}M "
           f"mesh={dict(mesh.shape)} batch={shape.global_batch} "
           f"seq={shape.seq_len}")

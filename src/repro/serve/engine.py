@@ -176,6 +176,13 @@ class SearchEngine:
     ``refresh`` (statistics merge + M-step, never a refit). The flush
     schedule is a host counter, mirroring ``Engine.generate``'s
     deterministic clustered-mode flushes.
+
+    The engine is sharding-transparent: over an ``IVFIndex`` built with
+    a ``ParallelContext`` (cells + posting lists partitioned over the
+    mesh, ``launch.serve --mesh``), the same pinned plan / padded-batch
+    contract holds — ``plan_search`` plans at the per-shard shapes and
+    each ``search`` call is one shard_map'd program with O(b·L)
+    cross-shard bytes (``index.search_collective_bytes`` models it).
     """
 
     def __init__(self, index, scfg: SearchConfig | None = None):

@@ -6,6 +6,10 @@ Logical axes:
   "tp"    — tensor parallelism (heads / d_ff / experts / vocab)
   "dp"    — batch dimension of activations
   "sp"    — sequence dimension (long-context / KV-cache sharding)
+  "points"— k-means point axis (N): data parallelism of the Lloyd /
+            streaming / IVF-build reductions (core.parallel)
+  "cells" — k-means centroid axis (K): centroid + posting-list
+            partitioning (two-stage argmin, sharded FlashIVF)
   None    — replicated
 
 A spec is a tuple of logical names per dim, e.g. ("fsdp", "tp") for a
@@ -30,6 +34,11 @@ DEFAULT_RULES = {
     "sp": ("data",),
     "mdl": ("model",),     # explicit model-axis placement (e.g. KV seq split)
     "expert": ("model",),
+    # k-means logical axes (core.parallel.ParallelContext.for_mesh):
+    # points ride the data-parallel axes, cells the model axis — first-
+    # class names so k-means programs never overload the LM-era dp/tp
+    "points": ("pod", "data"),
+    "cells": ("model",),
 }
 
 
@@ -38,8 +47,10 @@ def rules_for_mesh(mesh: Mesh) -> dict:
     if "pod" in mesh.axis_names:
         rules["fsdp"] = ("pod", "data")   # FSDP spans pods too
         rules["dp"] = ("pod", "data")
+        rules["points"] = ("pod", "data")
     else:
         rules["dp"] = ("data",)
+        rules["points"] = ("data",)
     return rules
 
 

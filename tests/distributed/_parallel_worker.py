@@ -1,0 +1,222 @@
+"""Worker executed in a subprocess with 8 fake CPU devices: the
+ParallelContext layer and sharded FlashIVF.
+
+Checks (each prints PASS/FAIL lines parsed by the pytest wrapper):
+  1. two-stage K-sharded assignment == single-device flash_assign
+     *bitwise*, including ties broken toward the lower centroid id
+  2. sharded IVFIndex.build/search on a (2 data x 4 cells) mesh returns
+     identical ids to the single-device index at full nprobe (and at a
+     partial nprobe on well-separated data)
+  3. sharded add()/refresh() (stats through the psum tree) match the
+     single-device online path; search stays id-identical afterwards
+  4. ragged corpus / ragged batches: padding rows are masked out of
+     every statistics reduction — no NaN, same centroids
+  5. a K-shard owning only dead cells (zero points): finite centroids
+     and top-k results, honest -1 ids only where the pool runs dry
+  6. data-parallel StreamingKMeans.partial_fit == single-device
+     (one O(K·d) psum per mini-batch; whole-shard padding tolerated)
+  7. collective-bytes model: sharded search traffic is O(b·L) —
+     linear in b and L, independent of cap/d/N (never the buckets)
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KMeansConfig
+from repro.core.parallel import ParallelContext, build_mesh
+from repro.core.streaming import StreamingKMeans
+from repro.index import IVFIndex
+from repro.kernels import ops
+
+ok = True
+
+
+def check(name, cond, detail=""):
+    global ok
+    print(("PASS" if cond else "FAIL"), name, detail, flush=True)
+    ok = ok and bool(cond)
+
+
+def main():
+    assert len(jax.devices()) == 8, jax.devices()
+    key = jax.random.PRNGKey(0)
+    n, k, d = 4096, 64, 32
+    kc, ka, kn, kq = jax.random.split(key, 4)
+    centers = jax.random.normal(kc, (k, d)) * 5.0
+    lbl = jax.random.randint(ka, (n,), 0, k)
+    x = centers[lbl] + 0.4 * jax.random.normal(kn, (n, d))
+    q = x[jax.random.randint(kq, (128,), 0, n)]
+
+    mesh = build_mesh((2, 4), ("data", "model"))
+    pctx = ParallelContext.for_mesh(mesh)
+    check("logical_axes_resolved",
+          pctx.data_axes == ("data",) and pctx.k_axis == "model",
+          pctx.describe())
+
+    # --- 1. two-stage assignment: bitwise parity + tie-breaking -----------
+    cfg = KMeansConfig(k=k)
+    assign = pctx.make_assign(cfg)
+    a_ref, m_ref = ops.flash_assign(x, centers.astype(x.dtype))
+    a_sh, m_sh = assign(pctx.shard_points(x), pctx.shard_centroids(centers))
+    check("two_stage_assign_bitwise",
+          np.array_equal(np.asarray(a_sh), np.asarray(a_ref)))
+    check("two_stage_assign_dists",
+          np.allclose(np.asarray(m_sh), np.asarray(m_ref), rtol=1e-6))
+    # duplicated centroids: every point has >= 2 exactly-tied candidates
+    # in *different* k-shards; the winner must be the lower global id
+    cdup = jnp.concatenate([centers[: k // 2], centers[: k // 2]], 0)
+    a_ref_t, _ = ops.flash_assign(x, cdup.astype(x.dtype))
+    a_sh_t, _ = assign(pctx.shard_points(x), pctx.shard_centroids(cdup))
+    check("two_stage_assign_tie_bitwise",
+          np.array_equal(np.asarray(a_sh_t), np.asarray(a_ref_t))
+          and int(np.max(np.asarray(a_sh_t))) < k // 2)
+
+    # --- 2. sharded IVF build + search parity -----------------------------
+    idx_ref = IVFIndex.build(x, k=k, max_iters=6)
+    idx_sh = IVFIndex.build(x, k=k, max_iters=6, pctx=pctx)
+    check("sharded_build_centroids",
+          np.allclose(np.asarray(idx_ref.centroids),
+                      np.asarray(idx_sh.centroids), atol=1e-5))
+    topk = 10
+    ids_ref, d_ref = idx_ref.search(q, topk=topk, nprobe=k)
+    ids_sh, d_sh = idx_sh.search(q, topk=topk, nprobe=k)
+    check("sharded_search_full_nprobe_ids_identical",
+          np.array_equal(np.asarray(ids_sh), np.asarray(ids_ref)))
+    check("sharded_search_full_nprobe_dists",
+          np.allclose(np.asarray(d_sh), np.asarray(d_ref),
+                      rtol=1e-5, atol=1e-5))
+    ids_ref_p, _ = idx_ref.search(q, topk=topk, nprobe=8)
+    ids_sh_p, _ = idx_sh.search(q, topk=topk, nprobe=8)
+    check("sharded_search_partial_nprobe_ids_identical",
+          np.array_equal(np.asarray(ids_sh_p), np.asarray(ids_ref_p)))
+
+    # --- 3. online add + refresh through the psum tree --------------------
+    kx, ky = jax.random.split(kq)
+    x_new = centers[jax.random.randint(kx, (333,), 0, k)] \
+        + 0.4 * jax.random.normal(ky, (333, d))
+    a1 = idx_ref.add(x_new)
+    a2 = idx_sh.add(x_new)          # 333 is ragged over 2 data shards
+    check("sharded_add_assignments", np.array_equal(np.asarray(a1),
+                                                    np.asarray(a2)))
+    check("sharded_add_pending_stats",
+          np.allclose(np.asarray(idx_ref._pending.sums),
+                      np.asarray(idx_sh._pending.sums), atol=1e-3)
+          and np.allclose(np.asarray(idx_ref._pending.counts),
+                          np.asarray(idx_sh._pending.counts)))
+    idx_ref.refresh()
+    idx_sh.refresh()
+    check("sharded_refresh_centroids",
+          np.allclose(np.asarray(idx_ref.centroids),
+                      np.asarray(idx_sh.centroids), atol=1e-4))
+    ids_ref2, _ = idx_ref.search(q, topk=topk, nprobe=k)
+    ids_sh2, _ = idx_sh.search(q, topk=topk, nprobe=k)
+    check("sharded_search_after_add_ids_identical",
+          np.array_equal(np.asarray(ids_sh2), np.asarray(ids_ref2)))
+
+    # --- 4. ragged corpus build (N % shards != 0) -------------------------
+    x_rag = x[:4001]
+    idx_rag_ref = IVFIndex.build(x_rag, k=k, max_iters=4)
+    idx_rag = IVFIndex.build(x_rag, k=k, max_iters=4, pctx=pctx)
+    check("ragged_build_finite",
+          bool(jnp.all(jnp.isfinite(idx_rag.centroids))))
+    check("ragged_build_centroids",
+          np.allclose(np.asarray(idx_rag_ref.centroids),
+                      np.asarray(idx_rag.centroids), atol=1e-4))
+    ids_rr, _ = idx_rag_ref.search(q, topk=topk, nprobe=k)
+    ids_rs, drs = idx_rag.search(q, topk=topk, nprobe=k)
+    check("ragged_build_search_ids_identical",
+          np.array_equal(np.asarray(ids_rs), np.asarray(ids_rr)))
+
+    # --- 5. a K-shard owning only dead cells ------------------------------
+    # all points live in cells 0..k/2-1: the last two k-shards own only
+    # empty posting lists and zero-count centroids
+    lbl_lo = jax.random.randint(ka, (n,), 0, k // 2)
+    x_lo = centers[lbl_lo] + 0.4 * jax.random.normal(kn, (n, d))
+    dead = IVFIndex(centers, capacity=256, pctx=pctx)
+    dead.add(x_lo)
+    dead.refresh()
+    check("dead_shard_refresh_finite",
+          bool(jnp.all(jnp.isfinite(dead.centroids))))
+    # dead cells had zero evidence: their centroids must be kept as-is
+    check("dead_shard_centroids_kept",
+          np.allclose(np.asarray(dead.centroids)[k // 2:],
+                      np.asarray(centers)[k // 2:]))
+    ids_d, dist_d = dead.search(q, topk=topk, nprobe=k)
+    dead_ref = IVFIndex(centers, capacity=256)
+    dead_ref.add(x_lo)
+    dead_ref.refresh()
+    ids_dr, _ = dead_ref.search(q, topk=topk, nprobe=k)
+    check("dead_shard_search_ids_identical",
+          np.array_equal(np.asarray(ids_d), np.asarray(ids_dr)))
+    check("dead_shard_search_finite",
+          bool(jnp.all(jnp.isfinite(dist_d)))
+          and int(np.min(np.asarray(ids_d))) >= 0)
+    # drain the pool below topk: only -1 ids may fill the tail
+    tiny = IVFIndex(centers[:8], capacity=8, pctx=ParallelContext(
+        build_mesh((2, 4), ("data", "model")), k_axis="model"))
+    tiny.add(x_lo[:4])
+    ids_t, dist_t = tiny.search(q[:16], topk=6, nprobe=8)
+    valid = np.asarray(ids_t) >= 0
+    check("dry_pool_honest_minus_one",
+          bool(np.all(np.sum(valid, axis=1) == 4))
+          and bool(np.all(np.isfinite(np.asarray(dist_t)[valid]))))
+
+    # --- 6. data-parallel streaming partial_fit ---------------------------
+    dctx = ParallelContext(build_mesh((8,), ("data",)))
+    scfg = KMeansConfig(k=16, init="random")
+    sk_ref = StreamingKMeans(scfg, seed=3)
+    sk_par = StreamingKMeans(scfg, seed=3, pctx=dctx)
+    for lo, hi in ((0, 512), (512, 1029), (1029, 1329), (1329, 2329)):
+        sk_ref.partial_fit(x[lo:hi])    # ragged batch sizes
+        sk_par.partial_fit(x[lo:hi])
+    check("parallel_partial_fit_centroids",
+          np.allclose(np.asarray(sk_ref.centroids),
+                      np.asarray(sk_par.centroids), atol=1e-4))
+    check("parallel_partial_fit_counts",
+          np.allclose(np.asarray(sk_ref.stats.counts),
+                      np.asarray(sk_par.stats.counts), atol=1e-3))
+    sk_par.partial_fit(x[:3])   # 5 of 8 shards are pure padding
+    check("parallel_partial_fit_tiny_batch_finite",
+          bool(jnp.all(jnp.isfinite(sk_par.centroids))))
+
+    # --- 6b. tol early-stop parity with the single-device rule ------------
+    # a huge tol stops the while_loop after the first M-step, in both
+    # the N-sharded and the K-sharded (psum'd scalar shift) loops
+    c0 = centers + 0.1
+    one = KMeansConfig(k=k, max_iters=1, tol=-1.0)
+    lax_ = KMeansConfig(k=k, max_iters=8, tol=1e9)
+    for name, kw in (("n_sharded", dict()),
+                     ("k_sharded", dict(k_axis="model"))):
+        pc = ParallelContext(build_mesh((2, 4), ("data", "model")), **kw)
+        cs = pc.shard_centroids(c0)
+        c_one, _, _ = pc.make_kmeans_fit(one)(pc.shard_points(x), cs)
+        c_tol, _, _ = pc.make_kmeans_fit(lax_)(pc.shard_points(x), cs)
+        check(f"tol_early_stop_{name}",
+              np.array_equal(np.asarray(c_one), np.asarray(c_tol)))
+
+    # --- 7. collective-bytes model: O(b·L), payload-free ------------------
+    b0 = pctx.search_collective_bytes(128, 8, 10, k, cap=64, d=32)
+    check("collective_bytes_payload_free",
+          b0 == pctx.search_collective_bytes(128, 8, 10, k,
+                                             cap=4096, d=1024))
+    check("collective_bytes_linear_in_b",
+          pctx.search_collective_bytes(256, 8, 10, k) == 2 * b0)
+    ll, pk = min(8, k // 4), 4
+    check("collective_bytes_value",
+          b0 == 2 * 4 * 128 * (ll + 10) * pk, f"b0={b0}")
+    # sanity: the sharded search moved less than the buckets it scanned
+    payload = idx_sh.cap * d * 4 * 8
+    check("collective_bytes_below_payload",
+          pctx.search_collective_bytes(128, 8, 10, k) < 128 * payload)
+
+    sys.exit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()
