@@ -1,0 +1,123 @@
+"""Reliability-layer costs — what durability and fault tolerance charge.
+
+Rows:
+- ``rel_snapshot_*``: wall cost of one atomic index snapshot (device ->
+  host gather + npz + manifest) and of ``clone_index`` (the in-memory
+  last-known-good copy); derived column reports the snapshot bytes.
+- ``rel_wal_append_*``: per-batch write-ahead-log append at RPO 1.
+- ``rel_recover_*``: cold recovery wall — load the snapshot and replay
+  the WAL tail through the live ``add`` path; derived column reports the
+  records replayed and that restored search ids match the uninterrupted
+  run bitwise.
+- ``rel_degraded_*``: serving QPS and recall@10 of the healthy engine vs
+  the same engine under a seeded ``FaultPlan`` with the full
+  ``HealthPolicy`` ladder — the price of never raising; derived column
+  carries the non-zero health counters.
+
+Wall numbers are compiled-XLA CPU (relative ordering only — see
+benchmarks/common.py).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+
+import jax
+import numpy as np
+
+from benchmarks import common as C
+from repro.index import IVFIndex, recall_at_k
+from repro.reliability import (FaultInjector, FaultPlan, HealthPolicy,
+                               clone_index)
+from repro.serve.engine import SearchConfig, SearchEngine
+
+
+def _blobs(key, n, k, d, spread=5.0, noise=0.4):
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * spread
+    assign = jax.random.randint(ka, (n,), 0, k)
+    return centers[assign] + jax.random.normal(kn, (n, d)) * noise
+
+
+def rows() -> list[str]:
+    out = []
+    n, k, d, nq, topk = 20_000, 32, 32, 128, 10
+    x = _blobs(jax.random.PRNGKey(0), n, k, d)
+    q = x[jax.random.randint(jax.random.PRNGKey(1), (nq,), 0, n)]
+    stream = [np.asarray(_blobs(jax.random.PRNGKey(10 + i), 512, k, d))
+              for i in range(8)]
+    scfg = SearchConfig(topk=topk, nprobe=8, query_batch=nq,
+                        refresh_every=4)
+
+    def build():
+        return IVFIndex.build(x, k=k, max_iters=8)
+
+    # --- snapshot / clone / WAL costs ------------------------------------
+    index = build()
+    with tempfile.TemporaryDirectory() as td:
+        us = C.wall_us(lambda _i: index.save(td), 0, reps=3, warmup=1)
+        nbytes = sum(os.path.getsize(os.path.join(td, f))
+                     for f in os.listdir(td))
+        out.append(C.fmt_row(f"rel_snapshot_N{n}_K{k}_d{d}", us,
+                             f"snapshot_bytes={nbytes}"))
+    us = C.wall_us(lambda _i: clone_index(index), 0, reps=3, warmup=1)
+    out.append(C.fmt_row(f"rel_lkg_clone_N{n}_K{k}_d{d}", us,
+                         "in_memory=1"))
+    with tempfile.TemporaryDirectory() as td:
+        scfg_d = SearchConfig(topk=topk, nprobe=8, query_batch=nq,
+                              refresh_every=4, snapshot_dir=td)
+        eng = SearchEngine(build(), scfg_d)
+        t0 = time.perf_counter()
+        for i, b in enumerate(stream[:4]):
+            eng.add(b)
+        wal_us = (time.perf_counter() - t0) * 1e6 / 4
+        out.append(C.fmt_row("rel_wal_append_B512", wal_us,
+                             f"records={len(eng.wal.seqnos())};rpo=1"))
+
+        # --- cold recovery: snapshot mid-stream, replay the tail ---------
+        eng.snapshot()
+        for b in stream[4:]:
+            eng.add(b)
+        ids_live, _ = eng.search(q)
+        t0 = time.perf_counter()
+        eng2 = SearchEngine.recover(td, scfg)
+        jax.block_until_ready(eng2.index.buckets)
+        us = (time.perf_counter() - t0) * 1e6
+        ids_rec, _ = eng2.search(q)
+        same = int(np.array_equal(np.asarray(ids_live),
+                                  np.asarray(ids_rec)))
+        out.append(C.fmt_row(
+            f"rel_recover_N{n}", us,
+            f"wal_replayed={eng2.counters.wal_records_replayed};"
+            f"identical={same}"))
+
+    # --- healthy vs chaos serving: QPS + recall + counters ---------------
+    eng_h = SearchEngine(build(), scfg, health=HealthPolicy(backoff_s=0.0))
+    ids_ref, _ = eng_h.index.search_brute(q, topk=topk)
+    us_h = C.wall_us(lambda _i: eng_h.search(q), 0, reps=3, warmup=1)
+    ids_h, _ = eng_h.search(q)
+    out.append(C.fmt_row(
+        f"rel_serve_healthy_B{nq}", us_h,
+        f"qps={nq / (us_h / 1e6):.0f};"
+        f"recall_at_{topk}={recall_at_k(ids_h, ids_ref):.3f}"))
+
+    inj = FaultInjector(FaultPlan.seeded(7, n_events=12, horizon=12))
+    eng_c = SearchEngine(build(), scfg, health=HealthPolicy(backoff_s=0.0),
+                         faults=inj)
+    for b in stream[:4]:
+        eng_c.add(b)
+    us_c = C.wall_us(lambda _i: eng_c.search(q), 0, reps=3, warmup=1)
+    ids_c, _ = eng_c.search(q)
+    eng_c.index.faults = None
+    hot = ";".join(f"{key}={v}"
+                   for key, v in eng_c.counters.as_dict().items() if v)
+    out.append(C.fmt_row(
+        f"rel_serve_chaos_seed7_B{nq}", us_c,
+        f"qps={nq / (us_c / 1e6):.0f};"
+        f"recall_at_{topk}={recall_at_k(ids_c, ids_ref):.3f};{hot}"))
+    return out
+
+
+if __name__ == "__main__":
+    print("\n".join(rows()))

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV rows:
   bench_outofcore -> paper §5.3 (billion-point streaming)
   bench_streaming -> online/mini-batch driver + incremental-vs-refit model
   bench_index     -> FlashIVF search workload (build/QPS/recall/online add)
+  bench_reliability -> durability + degraded-mode serving costs
   bench_compile   -> paper Fig. 5 (time-to-first-run)
   roofline        -> dry-run roofline table (deliverable g)
 """
@@ -19,14 +20,15 @@ def main() -> None:
     print("name,us_per_call,derived")
     sections = []
     from benchmarks import (bench_compile, bench_e2e, bench_index,
-                            bench_kernels, bench_outofcore, bench_streaming,
-                            roofline)
+                            bench_kernels, bench_outofcore,
+                            bench_reliability, bench_streaming, roofline)
     sections = [
         ("kernels", bench_kernels.rows),
         ("e2e", bench_e2e.rows),
         ("outofcore", bench_outofcore.rows),
         ("streaming", bench_streaming.rows),
         ("index", bench_index.rows),
+        ("reliability", bench_reliability.rows),
         ("compile", bench_compile.rows),
         ("roofline", roofline.rows),
     ]

@@ -31,6 +31,42 @@ def _flatten(tree: Any) -> dict:
     return flat
 
 
+def array_manifest(arrays: dict) -> dict:
+    """Per-key ``{shape, dtype}`` records for a flat array dict — written
+    into every manifest so ``restore`` (and the IVF snapshot loader,
+    which reuses this path) can fail with a *named* mismatch instead of a
+    cryptic npz/tree error."""
+    return {k: {"shape": [int(s) for s in np.shape(v)],
+                "dtype": str(np.asarray(v).dtype) if not hasattr(v, "dtype")
+                else str(v.dtype)}
+            for k, v in arrays.items()}
+
+
+def validate_arrays(expected: dict, arrays: dict, *, context: str) -> None:
+    """Check a flat array dict against ``array_manifest`` records.
+
+    Raises one ``ValueError`` listing *every* missing key and every
+    shape/dtype mismatch by name (the whole damage report, not just the
+    first symptom).
+    """
+    errs = []
+    for key, spec in sorted(expected.items()):
+        if key not in arrays:
+            errs.append(f"missing key {key!r} "
+                        f"(manifest says {spec['shape']} {spec['dtype']})")
+            continue
+        got = arrays[key]
+        shape = [int(s) for s in np.shape(got)]
+        dtype = str(got.dtype if hasattr(got, "dtype")
+                    else np.asarray(got).dtype)
+        if shape != list(spec["shape"]) or dtype != spec["dtype"]:
+            errs.append(f"key {key!r}: manifest says {spec['shape']} "
+                        f"{spec['dtype']}, found {shape} {dtype}")
+    if errs:
+        raise ValueError(f"{context}: manifest mismatch —\n  "
+                         + "\n  ".join(errs))
+
+
 class Checkpointer:
     def __init__(self, directory: str, *, keep: int = 3):
         self.dir = directory
@@ -54,7 +90,8 @@ class Checkpointer:
             np.savez(tmp, **{k: v for k, v in host.items()})
             os.replace(tmp, path)
             manifest = {"step": step, "treedef": str(treedef),
-                        "keys": sorted(host.keys())}
+                        "keys": sorted(host.keys()),
+                        "arrays": array_manifest(host)}
             mpath = os.path.join(self.dir, "manifest.json")
             with open(mpath + ".tmp", "w") as f:
                 json.dump(manifest, f)
@@ -94,12 +131,35 @@ class Checkpointer:
     def restore(self, step: int, like: Any, shardings: Any | None = None
                 ) -> Any:
         """Restore into the structure of ``like``; optionally reshard onto
-        a (possibly different) mesh via ``shardings`` (same tree shape)."""
+        a (possibly different) mesh via ``shardings`` (same tree shape).
+
+        The restore is validated before any leaf is touched: every key
+        the ``like`` tree requests must exist in the checkpoint, and —
+        when the manifest covers this step — each requested leaf's
+        shape/dtype must match the recorded per-key entry, so a drifted
+        model definition fails with a named mismatch report instead of a
+        cryptic npz KeyError or a tree-unflatten shape explosion.
+        """
         self.wait()
         path = os.path.join(self.dir, f"step_{step:08d}.npz")
         data = np.load(path)
-        paths = [jax.tree_util.keystr(p)
-                 for p, _ in jax.tree_util.tree_leaves_with_path(like)]
+        flat_like = _flatten(like)
+        paths = list(flat_like.keys())
+        missing = [k for k in paths if k not in data.files]
+        if missing:
+            raise ValueError(
+                f"restore(step {step}): checkpoint {path} is missing "
+                f"{len(missing)} requested keys (first: {missing[:3]}) — "
+                "tree structure changed since save?")
+        mpath = os.path.join(self.dir, "manifest.json")
+        if os.path.exists(mpath):
+            with open(mpath) as f:
+                manifest = json.load(f)
+            if manifest.get("step") == step and "arrays" in manifest:
+                entries = manifest["arrays"]
+                validate_arrays(
+                    {k: entries[k] for k in paths if k in entries},
+                    flat_like, context=f"restore(step {step})")
         leaves = [data[k] for k in paths]
         tree = jax.tree_util.tree_unflatten(
             jax.tree_util.tree_structure(like), leaves)

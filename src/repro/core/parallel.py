@@ -263,8 +263,8 @@ class ParallelContext:
                                jax.lax.psum(stats.inertia, axes))
 
     def merge_topl(self, idx: Array, val: Array, l: int, *,
-                   axis: str | None = None, tie: Array | None = None
-                   ) -> tuple[Array, Array]:
+                   axis: str | None = None, tie: Array | None = None,
+                   valid: Array | None = None) -> tuple[Array, Array]:
         """Cross-shard ascending top-``l`` merge of per-shard candidates.
 
         ``idx``/``val``: (B, L_loc) per-shard lists, each already
@@ -281,8 +281,20 @@ class ParallelContext:
         (B, L_loc) int32: equal values then break toward the lower tie
         key (lexicographic (val, tie) sort), reproducing the reference
         selection exactly on ties.
+
+        ``valid`` (scalar bool, per shard): a shard passing ``False``
+        contributes nothing — its list is blanked to ``(inf, -1)`` (and
+        tie-key int32 max) *before* the gather, so the merge behaves as
+        if the shard were absent. This is the dead-shard seam of the
+        reliability layer: a failed replica degrades the result pool
+        honestly instead of poisoning it.
         """
         axis = axis if axis is not None else self.k_axis
+        if valid is not None:
+            val = jnp.where(valid, val, jnp.inf)
+            idx = jnp.where(valid, idx, -1)
+            if tie is not None:
+                tie = jnp.where(valid, tie, jnp.iinfo(jnp.int32).max)
         if axis is None:
             return idx[:, :l], val[:, :l]
         b = val.shape[0]

@@ -132,6 +132,24 @@ class SufficientStats(NamedTuple):
         return SufficientStats(self.sums * gamma, self.counts * gamma,
                                self.inertia * gamma)
 
+    def sanitize(self) -> tuple["SufficientStats", Array]:
+        """Zero out rows carrying non-finite or negative evidence.
+
+        The numerical self-repair primitive of the reliability layer:
+        a cluster whose sums/counts were corrupted (NaN injection, a bad
+        upstream reduction) reverts to *no evidence* — ``finalize`` then
+        keeps its previous centroid, exactly the empty-cluster fallback
+        — instead of poisoning the M-step. Returns ``(clean, bad)`` with
+        ``bad`` a (K,) bool mask of the rows dropped.
+        """
+        ok = (jnp.all(jnp.isfinite(self.sums), axis=1)
+              & jnp.isfinite(self.counts) & (self.counts >= 0.0))
+        clean = SufficientStats(
+            jnp.where(ok[:, None], self.sums, 0.0),
+            jnp.where(ok, self.counts, 0.0),
+            jnp.where(jnp.isfinite(self.inertia), self.inertia, 0.0))
+        return clean, ~ok
+
     def finalize(self, c_prev: Array) -> Array:
         return ops.finalize_centroids(self.sums, self.counts, c_prev)
 

@@ -53,6 +53,7 @@ same O(K·d) psum tree as every other driver.
 from __future__ import annotations
 
 import functools
+import time
 
 import jax
 import jax.numpy as jnp
@@ -65,6 +66,7 @@ from repro.core.init import init_centroids
 from repro.core.kmeans import KMeans, KMeansConfig
 from repro.core.streaming import SufficientStats
 from repro.kernels import ops, ref
+from repro.reliability.faults import InjectedFault, corrupt_stats
 
 Array = jax.Array
 
@@ -169,6 +171,7 @@ class IVFIndex:
     """
 
     def __init__(self, centroids: Array, capacity: int, *,
+                 max_cap: int | None = None,
                  interpret: bool | None = None,
                  planner: "_plan.KernelPlanner | None" = None,
                  pctx=None):
@@ -176,6 +179,13 @@ class IVFIndex:
         self.centroids = centroids
         self.k, self.d = k, d
         self.cap = max(8, _round_up(capacity, 8))
+        # memory budget: posting lists never grow past max_cap slots per
+        # cell — overflow rows spill (counted, not stored) instead of
+        # doubling the bucket tensor until the device OOMs
+        self.max_cap = None if max_cap is None \
+            else max(8, _round_up(max_cap, 8))
+        if self.max_cap is not None:
+            self.cap = min(self.cap, self.max_cap)
         self.interpret = interpret
         self.pctx = pctx
         if pctx is not None and pctx.k_axis is not None:
@@ -185,6 +195,13 @@ class IVFIndex:
         self.bucket_ids = jnp.full((k, self.cap), -1, jnp.int32)
         self.counts = jnp.zeros((k,), jnp.int32)
         self.n_total = 0
+        # reliability state: spill accounting (graceful capacity
+        # degradation), the optional fault injector, and repair counters
+        self.spilled = 0
+        self.spill_counts = np.zeros(k, np.int64)
+        self.faults = None          # a reliability.faults.FaultInjector
+        self.repaired_cells = 0     # NaN stats rows zeroed by refresh
+        self.reseeded_cells = 0     # dead cells re-seeded by refresh
         # committed evidence (what the current centroids were refreshed
         # from) and pending evidence (folded in by the next refresh)
         self.stats = SufficientStats.zero(k, d)
@@ -241,7 +258,8 @@ class IVFIndex:
     @classmethod
     def build(cls, x, k: int, *, max_iters: int = 10, init: str = "kmeans++",
               tol: float = 0.0, step_impl: str = "auto",
-              capacity: int | None = None, chunk_size: int | None = None,
+              capacity: int | None = None, max_cap: int | None = None,
+              chunk_size: int | None = None,
               seed: int = 0, interpret: bool | None = None,
               planner: "_plan.KernelPlanner | None" = None,
               pctx=None) -> "IVFIndex":
@@ -282,8 +300,8 @@ class IVFIndex:
                 centroids, a, m = _train_sharded(pctx, cfg, key, xj)
             cap = capacity if capacity is not None else int(
                 jnp.max(jnp.bincount(a, length=k)))
-            index = cls(centroids, cap, interpret=interpret, planner=planner,
-                        pctx=pctx)
+            index = cls(centroids, cap, max_cap=max_cap,
+                        interpret=interpret, planner=planner, pctx=pctx)
             index._fold(xj, a, m)
         else:
             # out-of-core: ChunkedKMeans trains (init from the first
@@ -293,7 +311,8 @@ class IVFIndex:
             c0 = init_centroids(key, jnp.asarray(first), k, init)
             centroids, _ = driver.fit(x, c0)
             index = cls(centroids, capacity if capacity is not None else 8,
-                        interpret=interpret, planner=planner, pctx=pctx)
+                        max_cap=max_cap, interpret=interpret,
+                        planner=planner, pctx=pctx)
             for chunk in driver._chunks(x):
                 index.add(chunk)
         # build-time evidence is the committed baseline, not drift:
@@ -322,18 +341,34 @@ class IVFIndex:
         as every other driver — already partitioned over the cells axis.
         """
         x_new = jnp.asarray(x_new, self.buckets.dtype)
+        nan_evs: tuple = ()
+        if self.faults is not None:   # injection seam (reliability.faults)
+            evs = self.faults.poll("add")
+            for ev in evs:
+                if ev.kind == "drop_add":   # lost message: batch vanishes
+                    return jnp.zeros((0,), jnp.int32)
+                if ev.kind == "add_error":
+                    raise InjectedFault(f"injected add failure ({ev})")
+                if ev.kind == "latency":
+                    time.sleep(ev.arg)
+            nan_evs = tuple(e for e in evs if e.kind == "nan_stats")
         if x_new.shape[0] == 0:
             return jnp.zeros((0,), jnp.int32)
         if self.pctx is not None:
-            return self._add_sharded(x_new)
-        # planned per observed batch-shape bucket (not a magic batch
-        # size): a stream of same-bucket adds never replans
-        blk = self._batch_blocks(x_new.shape[0])
-        a, m = ops.flash_assign(x_new, self.centroids.astype(x_new.dtype),
-                                block_n=blk.assign_block_n,
-                                block_k=blk.assign_block_k,
-                                interpret=self.interpret)
-        self._fold(x_new, a, m)
+            a = self._add_sharded(x_new)
+        else:
+            # planned per observed batch-shape bucket (not a magic batch
+            # size): a stream of same-bucket adds never replans
+            blk = self._batch_blocks(x_new.shape[0])
+            a, m = ops.flash_assign(x_new,
+                                    self.centroids.astype(x_new.dtype),
+                                    block_n=blk.assign_block_n,
+                                    block_k=blk.assign_block_k,
+                                    interpret=self.interpret)
+            self._fold(x_new, a, m)
+        for ev in nan_evs:   # corrupt *after* the fold: refresh must repair
+            self._pending, _ = corrupt_stats(self._pending, int(ev.arg))
+            self._place()
         return a
 
     def _add_sharded(self, x_new: Array) -> Array:
@@ -392,7 +427,8 @@ class IVFIndex:
             SufficientStats(s, cnt, jnp.sum(m)))
         self._append(x, a)
 
-    def refresh(self, decay: float = 1.0) -> "IVFIndex":
+    def refresh(self, decay: float = 1.0, *, guard: bool = False,
+                repair_dead: bool = False) -> "IVFIndex":
         """Commit pending evidence and re-center the coarse centroids.
 
         The warm-start ``partial_fit`` contract with the assignment pass
@@ -400,15 +436,82 @@ class IVFIndex:
         assignment time, so the commit is one O(K·d) merge + M-step —
         no pass over any stored vector. ``decay < 1`` exponentially
         down-weights old evidence (drifting corpora).
+
+        ``guard=True`` sanitizes both evidence terms before the merge
+        (``SufficientStats.sanitize``): a cluster carrying non-finite
+        stats reverts to no-evidence and keeps its previous centroid —
+        corruption never reaches the M-step. ``repair_dead=True``
+        additionally re-seeds cells that hold no vectors *and* no
+        evidence by splitting the heaviest cell (a perturbed copy of its
+        centroid plus half its weight), so future adds can repopulate
+        them. Both are opt-in: the default commit stays bitwise
+        identical to the historical behaviour.
         """
-        self.stats = self.stats.scale(decay).merge(self._pending)
+        if self.faults is not None:   # injection seam (reliability.faults)
+            for ev in self.faults.poll("refresh"):
+                if ev.kind == "nan_stats":
+                    self._pending, _ = corrupt_stats(self._pending,
+                                                     int(ev.arg))
+                elif ev.kind == "latency":
+                    time.sleep(ev.arg)
+        pending, base = self._pending, self.stats.scale(decay)
+        if guard:
+            pending, bad_p = pending.sanitize()
+            base, bad_b = base.sanitize()
+            self.repaired_cells += int(jnp.sum(bad_p)) + int(jnp.sum(bad_b))
+        self.stats = base.merge(pending)
         self._pending = SufficientStats.zero(self.k, self.d)
         self.centroids = self.stats.finalize(self.centroids)
+        if repair_dead:
+            self.reseeded_cells += self._repair_dead_cells()
         self._place()   # merge/finalize are elementwise over K: re-pin
         return self
 
+    def _repair_dead_cells(self, eps: float = 1e-3) -> int:
+        """Re-seed cells with no stored vectors and no evidence.
+
+        Host-side (runs at refresh cadence, not per query): each dead
+        cell takes a perturbed copy of the heaviest cell's centroid and
+        half its evidence weight — the classic split-the-largest empty-
+        cluster repair, applied to the *index* so probes stop wasting
+        ``nprobe`` slots on cells that can never return a candidate.
+        Stored buckets are untouched; only centroids/stats move.
+        """
+        cnt = np.asarray(self.stats.counts).copy()
+        stored = np.asarray(self.counts)
+        dead = np.where((cnt <= 0.0) & (stored == 0))[0]
+        if dead.size == 0:
+            return 0
+        c = np.asarray(self.centroids).copy()
+        sums = np.asarray(self.stats.sums).copy()
+        n = 0
+        for cell in dead:
+            donor = int(np.argmax(cnt))
+            if cnt[donor] <= 1.0:   # nothing heavy enough to split
+                break
+            c[cell] = c[donor] * (1.0 + eps) + eps
+            cnt[donor] *= 0.5
+            sums[donor] *= 0.5
+            cnt[cell] = cnt[donor]
+            sums[cell] = c[cell] * cnt[cell]
+            n += 1
+        if n:
+            self.centroids = jnp.asarray(c)
+            self.stats = SufficientStats(jnp.asarray(sums),
+                                         jnp.asarray(cnt),
+                                         self.stats.inertia)
+        return n
+
     def _append(self, x: Array, a: Array) -> None:
-        """Append a batch in CSR order (sort-inverse, no per-point logic)."""
+        """Append a batch in CSR order (sort-inverse, no per-point logic).
+
+        When growth is capped (``max_cap``) and a cell is full, its
+        overflow rows **spill**: they are counted per-cell
+        (``spill_counts``/``spilled``) but not stored — graceful
+        degradation of recall under a fixed memory budget instead of an
+        unbounded doubling. Ids stay monotone (spilled rows consume ids
+        too), so WAL replay reproduces identical ids either way.
+        """
         n = x.shape[0]
         if n == 0:
             return
@@ -420,16 +523,34 @@ class IVFIndex:
         if needed > self.cap:
             self._grow(needed)
         ids_new = (self.n_total + order).astype(jnp.int32)
-        self.buckets = self.buckets.at[a_sorted, slot].set(
-            jnp.take(x, order, axis=0).astype(self.buckets.dtype))
+        x_sorted = jnp.take(x, order, axis=0).astype(self.buckets.dtype)
+        if needed > self.cap:   # max_cap reached: spill the overflow
+            keep = np.asarray(slot < self.cap)
+            lost = np.asarray(a_sorted)[~keep]
+            self.spill_counts += np.bincount(
+                lost, minlength=self.k).astype(np.int64)
+            self.spilled += int(lost.size)
+            keep_j = jnp.asarray(np.flatnonzero(keep), jnp.int32)
+            a_sorted = jnp.take(a_sorted, keep_j)
+            slot = jnp.take(slot, keep_j)
+            ids_new = jnp.take(ids_new, keep_j)
+            x_sorted = jnp.take(x_sorted, keep_j, axis=0)
+            add_counts = jnp.bincount(a_sorted, length=self.k)
+        else:
+            add_counts = jnp.bincount(a, length=self.k)
+        self.buckets = self.buckets.at[a_sorted, slot].set(x_sorted)
         self.bucket_ids = self.bucket_ids.at[a_sorted, slot].set(ids_new)
-        self.counts = self.counts + jnp.bincount(
-            a, length=self.k).astype(jnp.int32)
+        self.counts = self.counts + add_counts.astype(jnp.int32)
         self.n_total += n
 
     def _grow(self, needed: int) -> None:
-        """Grow posting-list capacity (amortized doubling, host-side)."""
+        """Grow posting-list capacity (amortized doubling, host-side),
+        clamped to the ``max_cap`` memory budget when one is set."""
         new_cap = max(_round_up(needed, 8), 2 * self.cap)
+        if self.max_cap is not None:
+            new_cap = min(new_cap, self.max_cap)
+        if new_cap <= self.cap:
+            return
         pad = new_cap - self.cap
         self.buckets = jnp.pad(self.buckets, ((0, 0), (0, pad), (0, 0)),
                                constant_values=_PAD_COORD)
@@ -497,22 +618,43 @@ class IVFIndex:
             raise ValueError(
                 f"topk={topk} exceeds the probed candidate pool "
                 f"nprobe*cap={cand}; raise nprobe or capacity")
+        shard_ok = None
+        if self.faults is not None:   # injection seam (reliability.faults)
+            for ev in self.faults.poll("search"):
+                if ev.kind == "latency":
+                    time.sleep(ev.arg)
+                elif ev.kind == "search_error":
+                    raise InjectedFault(f"injected search failure ({ev})")
+                elif ev.kind == "dead_shard":
+                    if self._k_sharded:
+                        nk = self.pctx.n_k_shards
+                        shard_ok = np.ones(nk, bool)
+                        shard_ok[int(ev.arg) % nk] = False
+                    else:   # one replica == the whole index: hard fail
+                        raise InjectedFault(
+                            f"injected replica death ({ev})")
         if self._k_sharded:
-            return self._search_sharded(q, topk, nprobe)
+            return self._search_sharded(q, topk, nprobe,
+                                        shard_ok=shard_ok)
         bqn, bqk, bsb, bsc = self.plan_search(q.shape[0], topk, nprobe)
         return _ivf_search(q, self.centroids, self.buckets, self.bucket_ids,
                            topk=topk, nprobe=nprobe, bqn=bqn, bqk=bqk,
                            bsb=bsb, bsc=bsc, interpret=self.interpret)
 
-    def _search_sharded(self, q: Array, topk: int, nprobe: int
-                        ) -> tuple[Array, Array]:
+    def _search_sharded(self, q: Array, topk: int, nprobe: int,
+                        shard_ok=None) -> tuple[Array, Array]:
         """Two-stage sharded search (one shard_map'd program, cached per
         geometry). Queries are sharded over the data axes (each data
         shard searches its slice — no replicated compute; a ragged batch
         is padded and sliced back); per-batch cross-shard traffic is two
         (value, index) top-L merges over the cells axis —
         ``pctx.search_collective_bytes`` models it; the posting-list
-        payloads never leave their owning shard."""
+        payloads never leave their owning shard.
+
+        ``shard_ok`` ((P_k,) bool, default all-alive) is a traced input:
+        a ``False`` entry blanks that K-shard's contribution to both
+        merges (``merge_topl(valid=...)``) — the dead-shard degradation
+        path shares the healthy program, no recompile."""
         pctx = self.pctx
         b = q.shape[0]
         pd = pctx.n_data_shards
@@ -524,8 +666,11 @@ class IVFIndex:
         if prog is None:
             prog = self._make_sharded_search(b_pad, topk, nprobe)
             self._sharded_search[key] = prog
+        if shard_ok is None:
+            shard_ok = np.ones(pctx.n_k_shards, bool)
         ids, dists = prog(pctx.shard_points(q), self.centroids,
-                          self.buckets, self.bucket_ids)
+                          self.buckets, self.bucket_ids,
+                          jnp.asarray(shard_ok))
         return ids[:b], dists[:b]
 
     def _make_sharded_search(self, b_pad: int, topk: int, nprobe: int):
@@ -538,8 +683,10 @@ class IVFIndex:
         bqn, bqk, bsb, bsc = self.plan_search(b_pad, topk, nprobe)
         interpret = self.interpret
 
-        def shard_fn(q, c_local, buckets, bucket_ids):
+        def shard_fn(q, c_local, buckets, bucket_ids, shard_ok):
             bl = q.shape[0]             # per-data-shard query slice
+            # a dead shard (reliability seam) contributes to neither merge
+            alive = shard_ok[jax.lax.axis_index(ka)]
             # stage 1: local top-ll probe over the owned centroids, then
             # the cross-shard top-nprobe merge — O(b·ll) wire bytes
             idx, val = ops.flash_probe(q, c_local.astype(q.dtype), l=ll,
@@ -547,7 +694,8 @@ class IVFIndex:
                                        interpret=interpret,
                                        want_dists=False)
             lo = jax.lax.axis_index(ka) * k_local
-            gcell, _ = pctx.merge_topl(idx + lo, val, nprobe)  # (bl, nprobe)
+            gcell, _ = pctx.merge_topl(idx + lo, val, nprobe,
+                                       valid=alive)   # (bl, nprobe)
             # stage 2: compact this shard's owned probed cells (stable:
             # global probe order preserved) into a fixed (bl, ll) block;
             # non-owned slots point at the padding cell k_local
@@ -579,15 +727,20 @@ class IVFIndex:
             ids_loc = jnp.take_along_axis(cand_ids, lidx, axis=1)
             gpos = (jnp.take_along_axis(order, lidx // cap, axis=1) * cap
                     + lidx % cap)
-            gids, gval = pctx.merge_topl(ids_loc, lval, topk, tie=gpos)
+            gids, gval = pctx.merge_topl(ids_loc, lval, topk, tie=gpos,
+                                         valid=alive)
             q32 = q.astype(jnp.float32)
             gval = gval + jnp.sum(q32 * q32, axis=-1, keepdims=True)
-            return gids, jnp.maximum(gval, 0.0)
+            # blanked (dead-shard) slots carry inf: report them as honest
+            # empty results, never a non-finite distance
+            gval = jnp.where(jnp.isfinite(gval), jnp.maximum(gval, 0.0),
+                             0.0)
+            return gids, gval
 
         fn = pctx.spmd(
             shard_fn,
             in_specs=(pctx.data_spec, P(ka, None), P(ka, None, None),
-                      P(ka, None)),
+                      P(ka, None), P(None)),
             out_specs=(P(pctx.data_axes, None), P(pctx.data_axes, None)))
         return jax.jit(fn)
 
@@ -599,6 +752,29 @@ class IVFIndex:
         flat_ids = self.bucket_ids.reshape(self.k * self.cap)
         idx, dists = ref.probe_ref(q, flat_x, topk)
         return jnp.take(flat_ids, idx), dists
+
+    # ------------------------------------------------------------------
+    # durability (reliability.snapshot)
+    # ------------------------------------------------------------------
+
+    def save(self, directory: str, *, seqno: int = 0,
+             extra: dict | None = None) -> str:
+        """Atomic, mesh-agnostic snapshot of the full index state
+        (buckets, ids, counts, committed + pending stats, plan cache) —
+        see ``reliability.snapshot.save_index``. ``seqno`` marks the
+        WAL position this snapshot covers."""
+        from repro.reliability.snapshot import save_index
+        return save_index(self, directory, seqno=seqno, extra=extra)
+
+    @classmethod
+    def load(cls, directory: str, *, seqno: int | None = None, pctx=None,
+             planner: "_plan.KernelPlanner | None" = None,
+             interpret: bool | None = None) -> "IVFIndex":
+        """Restore a snapshot onto any mesh (or none): arrays are stored
+        unsharded, placement is re-derived from ``pctx``."""
+        from repro.reliability.snapshot import load_index
+        return load_index(directory, seqno=seqno, pctx=pctx,
+                          planner=planner, interpret=interpret)
 
     # ------------------------------------------------------------------
     # introspection

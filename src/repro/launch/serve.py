@@ -10,6 +10,10 @@ plus a FlashIVF vector-search serving mode.
   # sharded serving: 1-way data x 8-way cells over 8 (fake) devices
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
   PYTHONPATH=src python -m repro.launch.serve --mode search --mesh 1x8
+
+  # reliability: durable snapshots + WAL, health ladder, seeded chaos
+  PYTHONPATH=src python -m repro.launch.serve --mode search \
+      --snapshot-dir /tmp/ivf-snap --health --chaos-seed 7
 """
 from __future__ import annotations
 
@@ -69,6 +73,8 @@ def _serve_search(args) -> None:
     """
     from repro.index import IVFIndex, recall_at_k
 
+    from repro.reliability import FaultInjector, FaultPlan, HealthPolicy
+
     pctx = None
     if args.mesh:
         pctx = ParallelContext.for_mesh(parse_mesh_flag(args.mesh))
@@ -87,8 +93,13 @@ def _serve_search(args) -> None:
     t_build = time.time() - t0
 
     scfg = SearchConfig(topk=args.topk, nprobe=args.nprobe,
-                        query_batch=args.queries)
-    eng = SearchEngine(index, scfg)
+                        query_batch=args.queries,
+                        snapshot_dir=args.snapshot_dir,
+                        snapshot_every=args.snapshot_every)
+    health = HealthPolicy() if args.health else None
+    faults = FaultInjector(FaultPlan.seeded(args.chaos_seed)) \
+        if args.chaos_seed is not None else None
+    eng = SearchEngine(index, scfg, health=health, faults=faults)
     q = x[jax.random.randint(kq, (args.queries,), 0, args.n)]
     ids, _ = eng.search(q)                     # compile + warm
     jax.block_until_ready(ids)
@@ -108,6 +119,23 @@ def _serve_search(args) -> None:
         cb = index.search_collective_bytes(args.queries, args.topk,
                                            args.nprobe)
         print(f"collective bytes/batch (modeled, O(b*L)): {cb}")
+    if health is not None or faults is not None:
+        hot = {k: v for k, v in eng.counters.as_dict().items() if v}
+        print(f"health counters: {hot or 'all healthy'}")
+    if args.snapshot_dir:
+        # durability demo: snapshot, kill, recover, verify identity
+        t0 = time.time()
+        eng.snapshot()
+        t_snap = time.time() - t0
+        index.faults = None   # the dead engine's injector dies with it
+        t0 = time.time()
+        eng2 = SearchEngine.recover(args.snapshot_dir, scfg, pctx=pctx)
+        t_rec = time.time() - t0
+        ids2, _ = eng2.search(q)
+        same = bool((jax.numpy.asarray(ids) == ids2).all())
+        print(f"snapshot {t_snap*1e3:.1f}ms; recover {t_rec:.2f}s "
+              f"(replayed {eng2.counters.wal_records_replayed} WAL "
+              f"records); restored search identical: {same}")
 
 
 def main() -> None:
@@ -137,6 +165,19 @@ def main() -> None:
     ap.add_argument("--kmeans-iters", type=int, default=8)
     ap.add_argument("--reps", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    # reliability (--mode search)
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="durable index snapshots + write-ahead add-log "
+                         "here; also runs a kill/recover identity demo")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="adds between automatic snapshots (0 = manual)")
+    ap.add_argument("--health", action="store_true",
+                    help="serve under a HealthPolicy (retry/backoff + "
+                         "degraded-mode ladder); prints health counters")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="inject a seeded FaultPlan into the serving path "
+                         "(deterministic chaos; implies interesting "
+                         "counters)")
     args = ap.parse_args()
 
     if args.mode == "search":

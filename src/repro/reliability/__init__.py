@@ -1,0 +1,34 @@
+"""repro.reliability — the serving-path reliability layer.
+
+Four pillars (DESIGN.md, "Reliability layer"):
+
+- **durability** (``snapshot``, ``wal``): mesh-agnostic ``IVFIndex``
+  snapshots (atomic tmp+rename+manifest, the Checkpointer pattern) plus
+  a write-ahead add-log so inserts between snapshots replay on recovery
+  with a bounded, configurable RPO;
+- **guarded ingestion** (``validate``): shape/dtype/non-finite checks
+  with reject / drop / sanitize policies for queries and inserts;
+- **fault injection** (``faults``): seeded, replayable fault plans with
+  deterministic seams in ``IVFIndex.add/refresh/search`` and the
+  cross-shard merge path — drop a batch, corrupt stats to NaN, blank a
+  shard's partial results, inject latency;
+- **health** (``health``): the ``HealthPolicy`` retry/backoff +
+  degradation ladder (retry -> lower nprobe -> brute force ->
+  last-known-good) and the ``HealthCounters`` every degradation is
+  reported through.
+"""
+from repro.reliability.faults import (FaultEvent, FaultInjector, FaultPlan,
+                                      InjectedFault, corrupt_stats)
+from repro.reliability.health import (HealthCounters, HealthPolicy,
+                                      NonFiniteResult)
+from repro.reliability.snapshot import (clone_index, latest_snapshot_seqno,
+                                        load_index, read_manifest, save_index)
+from repro.reliability.validate import BatchReport, ValidationError, guard_batch
+from repro.reliability.wal import AddLog
+
+__all__ = [
+    "AddLog", "BatchReport", "FaultEvent", "FaultInjector", "FaultPlan",
+    "HealthCounters", "HealthPolicy", "InjectedFault", "NonFiniteResult",
+    "ValidationError", "clone_index", "corrupt_stats", "guard_batch",
+    "latest_snapshot_seqno", "load_index", "read_manifest", "save_index",
+]

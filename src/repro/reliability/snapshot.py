@@ -1,0 +1,166 @@
+"""Durable, mesh-agnostic ``IVFIndex`` snapshots.
+
+Same discipline as ``checkpoint.checkpointer`` (whose manifest helpers
+this module reuses): one atomically-written npz per snapshot
+(tmp + rename) plus a JSON manifest recording per-key shape/dtype, the
+covered WAL sequence number, and the scalar index state. Arrays are
+stored **unsharded** — ``np.asarray`` gathers whatever the live mesh
+placement was — so a snapshot taken on one mesh restores onto any
+``ParallelContext`` (or none): placement is re-derived by the
+constructor's ``_place``, exactly the elastic contract of the training
+checkpoints.
+
+The plan cache (``IVFIndex._search_plans``) rides along in the manifest:
+restored geometries dispatch without re-running a chooser. Plan keys are
+geometry tuples that include the shard count under K-sharding, so plans
+from a different mesh are inert, never wrong.
+
+``clone_index`` is the same serialization round-trip without the disk —
+the in-memory last-known-good copy the ``HealthPolicy`` ladder falls
+back to.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import array_manifest, validate_arrays
+from repro.core.streaming import SufficientStats
+
+SNAPSHOT_VERSION = 1
+_PREFIX, _SUFFIX = "index_", ".npz"
+MANIFEST = "index_manifest.json"
+
+
+def _state_arrays(index) -> dict[str, np.ndarray]:
+    """Gather the full index state to host, unsharded."""
+    return {
+        "centroids": np.asarray(index.centroids),
+        "buckets": np.asarray(index.buckets),
+        "bucket_ids": np.asarray(index.bucket_ids),
+        "counts": np.asarray(index.counts),
+        "stats_sums": np.asarray(index.stats.sums),
+        "stats_counts": np.asarray(index.stats.counts),
+        "stats_inertia": np.asarray(index.stats.inertia),
+        "pending_sums": np.asarray(index._pending.sums),
+        "pending_counts": np.asarray(index._pending.counts),
+        "pending_inertia": np.asarray(index._pending.inertia),
+        "spill_counts": np.asarray(index.spill_counts),
+    }
+
+
+def _path(directory: str, seqno: int) -> str:
+    return os.path.join(directory, f"{_PREFIX}{seqno:08d}{_SUFFIX}")
+
+
+def save_index(index, directory: str, *, seqno: int = 0,
+               extra: dict | None = None) -> str:
+    """Snapshot ``index`` into ``directory`` as of WAL position ``seqno``.
+
+    ``extra`` (JSON-able) rides in the manifest — the serving engine
+    stores its flush-schedule counters there so recovery resumes the
+    *schedule*, not just the arrays.
+    """
+    os.makedirs(directory, exist_ok=True)
+    host = _state_arrays(index)
+    path = _path(directory, seqno)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **host)
+    os.replace(tmp, path)
+    manifest = {
+        "version": SNAPSHOT_VERSION, "seqno": int(seqno),
+        "k": index.k, "d": index.d, "cap": index.cap,
+        "max_cap": index.max_cap, "n_total": index.n_total,
+        "spilled": int(index.spilled),
+        "search_plans": [[list(key), list(val)]
+                         for key, val in index._search_plans.items()],
+        "arrays": array_manifest(host),
+        "extra": extra or {},
+    }
+    mpath = os.path.join(directory, MANIFEST)
+    with open(mpath + ".tmp", "w") as f:
+        json.dump(manifest, f)
+    os.replace(mpath + ".tmp", mpath)
+    return path
+
+
+def read_manifest(directory: str) -> dict:
+    with open(os.path.join(directory, MANIFEST)) as f:
+        return json.load(f)
+
+
+def latest_snapshot_seqno(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    seqs = [int(f[len(_PREFIX):-len(_SUFFIX)])
+            for f in os.listdir(directory)
+            if f.startswith(_PREFIX) and f.endswith(_SUFFIX)
+            and not f.endswith(".tmp.npz")]
+    return max(seqs) if seqs else None
+
+
+def _rebuild(host: dict, meta: dict, *, pctx=None, planner=None,
+             interpret=None):
+    """Construct a live IVFIndex from host state (disk or in-memory)."""
+    from repro.index.ivf import IVFIndex   # lazy: avoid an import cycle
+    index = IVFIndex(jnp.asarray(host["centroids"]), capacity=meta["cap"],
+                     max_cap=meta["max_cap"], interpret=interpret,
+                     planner=planner, pctx=pctx)
+    assert index.cap == meta["cap"], "capacity rounding drifted"
+    index.buckets = jnp.asarray(host["buckets"])
+    index.bucket_ids = jnp.asarray(host["bucket_ids"])
+    index.counts = jnp.asarray(host["counts"])
+    index.n_total = int(meta["n_total"])
+    index.spilled = int(meta["spilled"])
+    index.spill_counts = np.asarray(host["spill_counts"]).copy()
+    index.stats = SufficientStats(jnp.asarray(host["stats_sums"]),
+                                  jnp.asarray(host["stats_counts"]),
+                                  jnp.asarray(host["stats_inertia"]))
+    index._pending = SufficientStats(jnp.asarray(host["pending_sums"]),
+                                     jnp.asarray(host["pending_counts"]),
+                                     jnp.asarray(host["pending_inertia"]))
+    index._search_plans = {tuple(k): tuple(v)
+                           for k, v in meta.get("search_plans", [])}
+    index._place()
+    return index
+
+
+def load_index(directory: str, *, seqno: int | None = None, pctx=None,
+               planner=None, interpret=None):
+    """Restore a snapshot (the latest, or a specific ``seqno``) onto any
+    mesh. Arrays are validated against the manifest's per-key
+    shape/dtype records before the index is touched."""
+    if seqno is None:
+        seqno = latest_snapshot_seqno(directory)
+        if seqno is None:
+            raise FileNotFoundError(f"no index snapshot in {directory}")
+    manifest = read_manifest(directory)
+    with np.load(_path(directory, seqno)) as data:
+        host = {k: data[k] for k in data.files}
+    if manifest.get("seqno") == seqno:
+        validate_arrays(manifest["arrays"], host,
+                        context=f"load_index(seqno {seqno})")
+        meta = manifest
+    else:   # older snapshot than the manifest covers: scalars from shapes
+        meta = {"cap": host["buckets"].shape[1], "max_cap": None,
+                "n_total": int(host["counts"].sum()),
+                "spilled": int(host["spill_counts"].sum()),
+                "search_plans": []}
+    return _rebuild(host, meta, pctx=pctx, planner=planner,
+                    interpret=interpret)
+
+
+def clone_index(index, *, pctx=None, planner=None):
+    """In-memory snapshot round-trip: the last-known-good copy the
+    degradation ladder serves from when the live index is unusable."""
+    meta = {"cap": index.cap, "max_cap": index.max_cap,
+            "n_total": index.n_total, "spilled": int(index.spilled),
+            "search_plans": [[list(k), list(v)]
+                             for k, v in index._search_plans.items()]}
+    return _rebuild(_state_arrays(index), meta,
+                    pctx=pctx if pctx is not None else index.pctx,
+                    planner=planner if planner is not None else index.planner,
+                    interpret=index.interpret)

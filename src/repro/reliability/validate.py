@@ -1,0 +1,80 @@
+"""Guarded ingestion — query/insert validation with repair policies.
+
+A production search service cannot let one malformed request poison the
+index or crash a batch of co-scheduled queries. ``guard_batch`` is the
+one validation gate both traffic classes go through:
+
+- **shape / dtype** problems are caller bugs: no policy can repair a
+  request of the wrong dimensionality, so they always raise
+  ``ValidationError`` (a clear 4xx, never a kernel-shape crash later);
+- **non-finite rows** (NaN/inf payloads) follow the configured policy:
+  ``reject`` raises, ``drop`` removes the rows (inserts: don't index
+  garbage), ``sanitize`` zeroes the non-finite entries while keeping the
+  row count (queries: result rows must stay aligned with the request —
+  a sanitized query returns well-defined, finite, merely useless
+  neighbours instead of NaN distances that poison the whole batch's
+  top-k merge).
+
+Validation runs on the host (numpy) *before* any device transfer, so a
+rejected batch costs no HBM traffic and a NaN can never reach a kernel.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+class ValidationError(ValueError):
+    """A batch failed ingestion validation (shape/dtype, or non-finite
+    rows under the ``reject`` policy)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchReport:
+    """What the gate did to one batch."""
+
+    n: int          # rows in (pre-policy)
+    bad_rows: int   # rows containing at least one non-finite entry
+    action: str     # "pass" | "sanitized" | "dropped"
+
+
+POLICIES = ("reject", "drop", "sanitize")
+
+
+def guard_batch(x, d: int, *, policy: str = "sanitize",
+                name: str = "batch") -> tuple[np.ndarray, BatchReport]:
+    """Validate one ``(B, d)`` float batch; returns ``(clean, report)``.
+
+    ``clean`` is a host float array (float32 unless the input was already
+    a wider/narrower float) with no non-finite entries. See the module
+    docstring for the policy semantics.
+    """
+    if policy not in POLICIES:
+        raise ValueError(f"unknown validation policy {policy!r}; "
+                         f"expected one of {POLICIES}")
+    arr = np.asarray(x)
+    if arr.ndim != 2 or arr.shape[1] != d:
+        raise ValidationError(
+            f"{name}: expected a (B, {d}) array, got shape {arr.shape}")
+    if not np.issubdtype(arr.dtype, np.floating):
+        if np.issubdtype(arr.dtype, np.integer):
+            arr = arr.astype(np.float32)   # lossless enough for ingestion
+        else:
+            raise ValidationError(
+                f"{name}: expected a float batch, got dtype {arr.dtype}")
+    finite = np.isfinite(arr)
+    bad = ~finite.all(axis=1)
+    nbad = int(bad.sum())
+    if nbad == 0:
+        return arr, BatchReport(arr.shape[0], 0, "pass")
+    if policy == "reject":
+        raise ValidationError(
+            f"{name}: {nbad} of {arr.shape[0]} rows contain non-finite "
+            f"values (first bad row {int(np.nonzero(bad)[0][0])})")
+    if policy == "drop":
+        return (np.ascontiguousarray(arr[~bad]),
+                BatchReport(arr.shape[0], nbad, "dropped"))
+    clean = arr.copy()
+    clean[~finite] = 0.0
+    return clean, BatchReport(arr.shape[0], nbad, "sanitized")

@@ -20,18 +20,25 @@ periodic ``refresh`` instead of a refit.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import time
 from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import kmeans_attention as kma
 from repro.models import model as M
 from repro.models import transformer as T
 from repro.models.common import Ctx
+from repro.reliability.health import HealthCounters, HealthPolicy, \
+    NonFiniteResult
+from repro.reliability.validate import guard_batch
+from repro.reliability.wal import AddLog
 
 Array = jax.Array
 
@@ -143,6 +150,8 @@ class Engine:
                     caches = self._recluster(caches)
                     since_flush = 0
             tok = self._sample(logits[:, 0], key, i + 1)
+        if not out:   # steps=0: prefill-only call, honest empty result
+            return jnp.zeros((tokens.shape[0], 0), jnp.int32)
         return jnp.concatenate(out, axis=1)
 
     def _sample(self, logits: Array, key, i: int) -> Array:
@@ -164,6 +173,10 @@ class SearchConfig:
     query_batch: int = 256    # queries are padded to this (jit-cache shape)
     refresh_every: int = 8    # add() batches between automatic refreshes
     refresh_decay: float = 1.0
+    # durability (reliability layer; None/0 = off)
+    snapshot_dir: str | None = None   # index snapshots + WAL live here
+    snapshot_every: int = 0           # adds between automatic snapshots
+    wal_log_every: int = 1            # RPO knob (see reliability.wal)
 
 
 class SearchEngine:
@@ -185,12 +198,29 @@ class SearchEngine:
     cross-shard bytes (``index.search_collective_bytes`` models it).
     """
 
-    def __init__(self, index, scfg: SearchConfig | None = None):
+    def __init__(self, index, scfg: SearchConfig | None = None, *,
+                 health: HealthPolicy | None = None, faults=None):
         self.index = index
         self.scfg = scfg or SearchConfig()
+        self.health = health
+        self.counters = HealthCounters()
+        if faults is not None:   # attach the injector at the index seams
+            index.faults = faults
         self.queries_served = 0
         self.adds_since_refresh = 0
         self.refresh_count = 0
+        # durability: WAL + snapshots when a snapshot_dir is configured
+        self.wal = AddLog(self.scfg.snapshot_dir,
+                          log_every=self.scfg.wal_log_every) \
+            if self.scfg.snapshot_dir else None
+        self._seqno = 0            # last assigned insert-batch seqno
+        self._adds_since_snap = 0
+        self._replaying = False    # WAL replay re-enters add(): no re-log
+        # admission-controlled pending-add queue (bounded requeue buffer
+        # for inserts that failed transiently) + last-known-good clone
+        self._pending_adds: collections.deque = collections.deque()
+        self._lkg = None
+        self._mark_healthy()
         # Pin the kernel plans for the one geometry this engine serves —
         # the padded (query_batch, d) shape at the index's current
         # (k, cap) — at config time, so the first query (and every one
@@ -202,30 +232,252 @@ class SearchEngine:
             self.pinned_plan = index.plan_search(
                 self.scfg.query_batch, self.scfg.topk, self.scfg.nprobe)
 
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+
     def search(self, q: Array) -> tuple[Array, Array]:
-        """q: (B, d), any B <= query_batch -> (ids (B, topk), dists)."""
+        """q: (B, d) -> (ids (B, topk), dists) for any B.
+
+        Batches larger than ``query_batch`` are split into padded
+        sub-batches (each reusing the one pinned executable) and the
+        results concatenated — arbitrary B, still zero replans. With a
+        ``HealthPolicy`` attached this never raises and never returns
+        non-finite distances: queries are sanitized on the way in and
+        every sub-batch walks the degradation ladder (see
+        ``reliability.health``)."""
         q = jnp.asarray(q)
         b = q.shape[0]
+        if self.health is not None:
+            qh, rep = guard_batch(np.asarray(q), self.index.d,
+                                  policy=self.health.query_policy,
+                                  name="query batch")
+            self.counters.queries_sanitized += rep.bad_rows
+            q = jnp.asarray(qh, q.dtype)
         qb = self.scfg.query_batch
-        if b > qb:
-            raise ValueError(f"query batch {b} exceeds query_batch={qb}; "
-                             "split the request or raise the config")
-        if b < qb:
-            q = jnp.pad(q, ((0, qb - b), (0, 0)))
-        ids, dists = self.index.search(q, topk=self.scfg.topk,
-                                       nprobe=self.scfg.nprobe)
+        out_ids, out_d = [], []
+        for lo in range(0, max(b, 1), qb):
+            qc = q[lo:lo + qb]
+            bc = qc.shape[0]
+            if bc < qb:
+                qc = jnp.pad(qc, ((0, qb - bc), (0, 0)))
+            ids, dists = self._search_padded(qc)
+            out_ids.append(ids[:bc])
+            out_d.append(dists[:bc])
         self.queries_served += b
-        return ids[:b], dists[:b]
+        return (jnp.concatenate(out_ids, axis=0),
+                jnp.concatenate(out_d, axis=0))
+
+    def _search_padded(self, q: Array) -> tuple[Array, Array]:
+        if self.health is None:
+            return self.index.search(q, topk=self.scfg.topk,
+                                     nprobe=self.scfg.nprobe)
+        return self._ladder(q)
+
+    def _attempt(self, q: Array, nprobe: int) -> tuple[Array, Array]:
+        """One configured search; non-finite output counts as a failure."""
+        ids, dists = self.index.search(q, topk=self.scfg.topk,
+                                       nprobe=nprobe)
+        if self.health.check_finite \
+                and not bool(np.isfinite(np.asarray(dists)).all()):
+            raise NonFiniteResult("search returned non-finite distances")
+        return ids, dists
+
+    def _ladder(self, q: Array) -> tuple[Array, Array]:
+        """The degradation ladder (``reliability.health`` docstring):
+        retry/backoff -> nprobe halving -> brute force -> last-known-good
+        -> honest black-hole. Never raises."""
+        pol, ctr = self.health, self.counters
+        nprobe = min(self.scfg.nprobe, self.index.k)
+        attempts = pol.max_retries + 1   # retries only at the full nprobe
+        delay = pol.backoff_s
+        while True:
+            for i in range(attempts):
+                try:
+                    ids, dists = self._attempt(q, nprobe)
+                    if nprobe >= min(self.scfg.nprobe, self.index.k):
+                        ctr.searches_ok += 1
+                    else:
+                        ctr.nprobe_degraded += 1
+                    return ids, dists
+                except Exception:
+                    if i < attempts - 1:
+                        ctr.retries += 1
+                        if delay > 0:
+                            time.sleep(delay)
+                            delay *= pol.backoff_factor
+            if nprobe > pol.min_nprobe:   # rung 2: cheaper, lower recall
+                nprobe = max(pol.min_nprobe, nprobe // 2)
+                attempts = 1
+                continue
+            break
+        if pol.brute_fallback:   # rung 3: no probe stage left to fail
+            try:
+                ids, dists = self.index.search_brute(q, topk=self.scfg.topk)
+                if not bool(np.isfinite(np.asarray(dists)).all()):
+                    raise NonFiniteResult("brute force non-finite")
+                ctr.brute_fallbacks += 1
+                return ids, dists
+            except Exception:
+                pass
+        if pol.lkg_fallback and self._lkg is not None:   # rung 4: stale
+            try:
+                ids, dists = self._lkg.search(q, topk=self.scfg.topk,
+                                              nprobe=nprobe)
+                if not bool(np.isfinite(np.asarray(dists)).all()):
+                    raise NonFiniteResult("lkg non-finite")
+                ctr.lkg_fallbacks += 1
+                return ids, dists
+            except Exception:
+                pass
+        ctr.blackholed += 1   # rung 5: honest empty rows
+        b = q.shape[0]
+        return (jnp.full((b, self.scfg.topk), -1, jnp.int32),
+                jnp.zeros((b, self.scfg.topk), jnp.float32))
+
+    # ------------------------------------------------------------------
+    # ingestion
+    # ------------------------------------------------------------------
 
     def add(self, x_new: Array) -> Array:
-        """Online insert; auto-refreshes on the host-side flush schedule."""
-        a = self.index.add(x_new)
-        self.adds_since_refresh += 1
+        """Online insert; auto-refreshes on the host-side flush schedule.
+
+        With durability configured the batch is WAL-logged *before* it
+        touches the index (log-before-apply); with a ``HealthPolicy``
+        it is validated first (``insert_policy``) and a failed apply is
+        parked on the bounded admission queue and retried on the next
+        call instead of being lost — or rejected outright once the
+        queue is full (backpressure, not unbounded memory)."""
+        x = np.asarray(x_new)
+        if self.health is not None:
+            x, rep = guard_batch(x, self.index.d,
+                                 policy=self.health.insert_policy,
+                                 name="insert batch")
+            if rep.action == "dropped":
+                self.counters.insert_rows_dropped += rep.bad_rows
+        if x.shape[0] == 0:
+            return jnp.zeros((0,), jnp.int32)
+        self._seqno += 1
+        if self.wal is not None and not self._replaying:
+            self.wal.append(self._seqno, x)
+        self._drain_pending()
+        a = self._apply(self._seqno, x)
         if self.adds_since_refresh >= self.scfg.refresh_every:
             self.refresh()
+        self._adds_since_snap += 1
+        if (self.scfg.snapshot_every and not self._replaying
+                and self._adds_since_snap >= self.scfg.snapshot_every):
+            self.snapshot()
         return a
 
+    def _apply(self, seqno: int, x) -> Array:
+        """Apply one logged batch; requeue (bounded) on failure."""
+        try:
+            a = self.index.add(x)
+        except Exception:
+            if self.health is not None and len(self._pending_adds) \
+                    < self.health.max_pending_adds:
+                self._pending_adds.append((seqno, x))
+                self.counters.adds_requeued += 1
+            else:
+                self.counters.adds_rejected += 1
+            if self.health is None:
+                raise
+            return jnp.zeros((0,), jnp.int32)
+        self.adds_since_refresh += 1
+        return a
+
+    def _drain_pending(self) -> None:
+        """Retry parked inserts (admission queue) ahead of new work."""
+        for _ in range(len(self._pending_adds)):
+            seqno, x = self._pending_adds.popleft()
+            self._apply(seqno, x)
+
     def refresh(self) -> None:
-        self.index.refresh(decay=self.scfg.refresh_decay)
+        """Commit pending evidence — guarded/self-repairing under a
+        ``HealthPolicy`` (NaN stats rows zeroed, dead cells re-seeded),
+        and a failed commit leaves the schedule armed for retry instead
+        of propagating."""
+        pol = self.health
+        try:
+            if pol is not None:
+                r0 = self.index.repaired_cells
+                d0 = self.index.reseeded_cells
+                self.index.refresh(decay=self.scfg.refresh_decay,
+                                   guard=pol.guard_refresh,
+                                   repair_dead=pol.repair_dead)
+                self.counters.stats_repaired += \
+                    self.index.repaired_cells - r0
+                self.counters.dead_cells_reseeded += \
+                    self.index.reseeded_cells - d0
+            else:
+                self.index.refresh(decay=self.scfg.refresh_decay)
+        except Exception:
+            if pol is None:
+                raise
+            self.counters.refresh_failures += 1
+            return
         self.adds_since_refresh = 0
         self.refresh_count += 1
+        self._mark_healthy()
+
+    def _mark_healthy(self) -> None:
+        """Refresh the last-known-good clone (rung 4 of the ladder)."""
+        if self.health is not None and self.health.lkg_fallback:
+            from repro.reliability.snapshot import clone_index
+            self._lkg = clone_index(self.index)
+
+    # ------------------------------------------------------------------
+    # durability
+    # ------------------------------------------------------------------
+
+    def snapshot(self) -> str:
+        """Snapshot the index (+ the engine's schedule counters) as of
+        the current WAL position, then truncate the covered WAL tail."""
+        if not self.scfg.snapshot_dir:
+            raise ValueError("snapshot() needs scfg.snapshot_dir")
+        path = self.index.save(
+            self.scfg.snapshot_dir, seqno=self._seqno,
+            extra={"adds_since_refresh": self.adds_since_refresh,
+                   "refresh_count": self.refresh_count,
+                   "queries_served": self.queries_served})
+        if self.wal is not None:
+            self.wal.truncate(self._seqno)
+        self._adds_since_snap = 0
+        self.counters.snapshots_written += 1
+        return path
+
+    @classmethod
+    def recover(cls, directory: str, scfg: SearchConfig | None = None, *,
+                health: HealthPolicy | None = None, faults=None,
+                pctx=None, planner=None,
+                interpret: bool | None = None) -> "SearchEngine":
+        """Crash recovery: load the latest snapshot (onto any mesh) and
+        replay the WAL tail through the live ``add`` path — bitwise the
+        index an uninterrupted run would hold (same batches, same order,
+        same deterministic refresh schedule, restored from the
+        manifest's ``extra``)."""
+        from repro.index.ivf import IVFIndex
+        from repro.reliability.snapshot import read_manifest
+        index = IVFIndex.load(directory, pctx=pctx, planner=planner,
+                              interpret=interpret)
+        scfg = dataclasses.replace(scfg or SearchConfig(),
+                                   snapshot_dir=directory)
+        eng = cls(index, scfg, health=health, faults=faults)
+        manifest = read_manifest(directory)
+        extra = manifest.get("extra", {})
+        eng.adds_since_refresh = extra.get("adds_since_refresh", 0)
+        eng.refresh_count = extra.get("refresh_count", 0)
+        eng.queries_served = extra.get("queries_served", 0)
+        eng._seqno = int(manifest.get("seqno", 0))
+        covered = eng._seqno
+        eng._replaying = True
+        try:
+            for seqno, x in eng.wal.replay(after=covered):
+                eng._seqno = seqno - 1   # add() reassigns exactly seqno
+                eng.add(x)
+                eng.counters.wal_records_replayed += 1
+        finally:
+            eng._replaying = False
+        eng._mark_healthy()
+        return eng

@@ -17,6 +17,11 @@ Checks (each prints PASS/FAIL lines parsed by the pytest wrapper):
      (one O(K·d) psum per mini-batch; whole-shard padding tolerated)
   7. collective-bytes model: sharded search traffic is O(b·L) —
      linear in b and L, independent of cap/d/N (never the buckets)
+  8. reliability: a snapshot taken on one mesh restores onto no mesh
+     or a different mesh with identical results; an injected dead
+     K-shard degrades to filtered brute force (finite, self-healing);
+     injected NaN stats are repaired by guarded refresh in lockstep
+     with the single-device index
 """
 import os
 
@@ -214,6 +219,83 @@ def main():
     payload = idx_sh.cap * d * 4 * 8
     check("collective_bytes_below_payload",
           pctx.search_collective_bytes(128, 8, 10, k) < 128 * payload)
+
+    # --- 8. reliability: mesh-agnostic snapshots + sharded fault seams ----
+    import tempfile
+
+    from repro.kernels import ref as _ref
+    from repro.reliability import (FaultEvent, FaultInjector, FaultPlan,
+                                   corrupt_stats)
+
+    with tempfile.TemporaryDirectory() as td:
+        idx_sh.save(td, seqno=5)
+        # a snapshot taken on the (2 data x 4 cells) mesh restores onto
+        # no mesh at all...
+        flat = IVFIndex.load(td)
+        ids_f, _ = flat.search(q, topk=topk, nprobe=k)
+        check("snapshot_restore_unsharded_ids_identical",
+              np.array_equal(np.asarray(ids_f), np.asarray(ids_sh2)))
+        # ...and onto a *different* (4 data x 2 cells) mesh
+        pctx42 = ParallelContext(build_mesh((4, 2), ("data", "model")),
+                                 k_axis="model")
+        re42 = IVFIndex.load(td, pctx=pctx42)
+        ids_42, _ = re42.search(q, topk=topk, nprobe=k)
+        check("snapshot_restore_other_mesh_ids_identical",
+              np.array_equal(np.asarray(ids_42), np.asarray(ids_sh2)))
+
+    # dead-shard injection: blanking one K-shard out of both merges must
+    # equal brute force over the surviving shards' buckets — degraded
+    # honestly, never poisoned
+    dead_shard = 2
+    idx_sh.faults = FaultInjector(FaultPlan(
+        [FaultEvent("search", "dead_shard", 0, arg=dead_shard)]))
+    ids_dead, d_dead = idx_sh.search(q, topk=topk, nprobe=k)
+    idx_sh.faults = None
+    kl = k // pctx.n_k_shards
+    bx = np.asarray(idx_sh.buckets).copy()
+    bi = np.asarray(idx_sh.bucket_ids).copy()
+    bx[dead_shard * kl:(dead_shard + 1) * kl] = 1e15
+    bi[dead_shard * kl:(dead_shard + 1) * kl] = -1
+    qd = jnp.asarray(q, idx_sh.buckets.dtype)
+    pos, _ = _ref.probe_ref(qd, jnp.asarray(
+        bx.reshape(k * idx_sh.cap, d)), topk)
+    ids_exp = jnp.take(jnp.asarray(bi.reshape(-1)), pos)
+    check("dead_shard_injection_matches_filtered_brute",
+          np.array_equal(np.asarray(ids_dead), np.asarray(ids_exp)))
+    check("dead_shard_injection_finite",
+          bool(jnp.all(jnp.isfinite(d_dead))))
+    ids_back, _ = idx_sh.search(q, topk=topk, nprobe=k)   # next call heals
+    check("dead_shard_recovers_next_call",
+          np.array_equal(np.asarray(ids_back), np.asarray(ids_sh2)))
+
+    # nan_stats injection on the sharded add path: the same seeded
+    # corruption applied to the single-device index, both guarded
+    # refreshes repair, centroids stay in lockstep
+    nan_seed = 9
+    x_nan = centers[jax.random.randint(kx, (256,), 0, k)] \
+        + 0.4 * jax.random.normal(ky, (256, d))
+    idx_sh.faults = FaultInjector(FaultPlan(
+        [FaultEvent("add", "nan_stats", 0, arg=nan_seed)]))
+    a_sh_n = idx_sh.add(x_nan)
+    idx_sh.faults = None
+    a_ref_n = idx_ref.add(x_nan)
+    idx_ref._pending, _ = corrupt_stats(idx_ref._pending, nan_seed)
+    check("nan_stats_sharded_add_assignments",
+          np.array_equal(np.asarray(a_sh_n), np.asarray(a_ref_n)))
+    check("nan_stats_pending_corrupted",
+          bool(jnp.any(jnp.isnan(idx_sh._pending.sums))))
+    idx_ref.refresh(guard=True)
+    idx_sh.refresh(guard=True)
+    check("nan_stats_guarded_refresh_repairs",
+          idx_sh.repaired_cells > 0
+          and bool(jnp.all(jnp.isfinite(idx_sh.centroids))))
+    check("nan_stats_guarded_refresh_parity",
+          np.allclose(np.asarray(idx_ref.centroids),
+                      np.asarray(idx_sh.centroids), atol=1e-4))
+    ids_ref3, _ = idx_ref.search(q, topk=topk, nprobe=k)
+    ids_sh3, _ = idx_sh.search(q, topk=topk, nprobe=k)
+    check("nan_stats_search_after_repair_ids_identical",
+          np.array_equal(np.asarray(ids_sh3), np.asarray(ids_ref3)))
 
     sys.exit(0 if ok else 1)
 

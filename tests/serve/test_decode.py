@@ -97,6 +97,18 @@ def test_clustered_multi_step_recent_buffer(key):
     assert bool(jnp.all(out >= 0))
 
 
+def test_engine_generate_zero_steps(key):
+    """steps=0 is a prefill-only call: an empty (B, 0) int32 result, not
+    a crash in the output concatenate."""
+    cfg = get_config("starcoder2-3b").reduced()
+    params, _ = M.init_model(key, cfg)
+    engine = Engine(cfg, params, ServeConfig(max_seq=64))
+    tokens = jax.random.randint(jax.random.fold_in(key, 1), (2, 16), 0,
+                                cfg.vocab_size)
+    out = engine.generate(tokens, 0)
+    assert out.shape == (2, 0) and out.dtype == jnp.int32
+
+
 def test_engine_dense_vs_clustered_agree(key):
     """With top == all clusters the sparse decode is exact, so greedy
     outputs must agree with the dense engine."""

@@ -1,0 +1,368 @@
+"""Reliability layer: guarded ingestion, durable snapshots + WAL replay,
+deterministic fault injection, and the degraded-mode search ladder.
+
+The serving contract under test: with a ``HealthPolicy`` attached,
+``SearchEngine.search`` never raises and never returns non-finite
+distances — under every seeded fault plan — and a crash recovery
+(snapshot + WAL replay) reproduces the uninterrupted run's search
+results bitwise.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.streaming import SufficientStats
+from repro.index import IVFIndex
+from repro.reliability import (AddLog, BatchReport, FaultEvent,
+                               FaultInjector, FaultPlan, HealthPolicy,
+                               InjectedFault, ValidationError, clone_index,
+                               corrupt_stats, guard_batch,
+                               latest_snapshot_seqno, read_manifest)
+from repro.serve.engine import SearchConfig, SearchEngine
+
+K, D = 16, 16
+
+
+def _blobs(seed, n, spread=6.0, noise=0.3):
+    key = jax.random.PRNGKey(seed)
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (K, D)) * spread
+    assign = jax.random.randint(ka, (n,), 0, K)
+    return np.asarray(centers[assign]
+                      + jax.random.normal(kn, (n, D)) * noise)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    x = _blobs(0, 1024)
+    stream = [_blobs(10 + i, 64) for i in range(8)]
+    q = _blobs(99, 40)
+    return x, stream, q
+
+
+def _build(x):
+    return IVFIndex.build(x, k=K, max_iters=6, seed=0)
+
+
+SCFG = SearchConfig(topk=5, nprobe=4, query_batch=32, refresh_every=2)
+
+
+# --- ingestion validation ---------------------------------------------------
+
+def test_guard_batch_policies():
+    x = np.ones((8, D), np.float32)
+    x[2, 3] = np.nan
+    x[5, 0] = np.inf
+    clean, rep = guard_batch(x, D, policy="sanitize")
+    assert rep == BatchReport(8, 2, "sanitized")
+    assert clean.shape == (8, D) and np.isfinite(clean).all()
+    assert clean[2, 3] == 0.0 and clean[2, 0] == 1.0   # row kept, entry zeroed
+    kept, rep = guard_batch(x, D, policy="drop")
+    assert rep.action == "dropped" and kept.shape == (6, D)
+    with pytest.raises(ValidationError, match="non-finite"):
+        guard_batch(x, D, policy="reject")
+    with pytest.raises(ValidationError, match="expected a"):
+        guard_batch(np.ones((8, D + 1), np.float32), D)
+    with pytest.raises(ValidationError, match="float"):
+        guard_batch(np.zeros((4, D), bool), D)
+    ints, rep = guard_batch(np.ones((4, D), np.int32), D)
+    assert ints.dtype == np.float32 and rep.action == "pass"
+
+
+def test_stats_sanitize():
+    s = SufficientStats.zero(K, D)
+    s = SufficientStats(s.sums.at[3].set(jnp.nan),
+                        s.counts.at[5].set(-1.0),
+                        jnp.asarray(jnp.inf))
+    clean, bad = s.sanitize()
+    assert np.asarray(bad).sum() == 2
+    assert bool(jnp.all(jnp.isfinite(clean.sums)))
+    assert float(clean.inertia) == 0.0
+    # finalize after sanitize keeps the previous centroid for bad rows
+    c_prev = jnp.ones((K, D), jnp.float32)
+    np.testing.assert_array_equal(np.asarray(clean.finalize(c_prev)[3]),
+                                  np.ones(D, np.float32))
+
+
+# --- fault plans are deterministic data -------------------------------------
+
+def test_fault_plan_seeded_deterministic_and_json():
+    p1, p2 = FaultPlan.seeded(42), FaultPlan.seeded(42)
+    assert p1.events == p2.events
+    assert FaultPlan.seeded(43).events != p1.events
+    assert FaultPlan.from_json(p1.to_json()).events == p1.events
+    with pytest.raises(ValueError, match="site"):
+        FaultEvent("nope", "latency", 0)
+    inj = FaultInjector(FaultPlan([FaultEvent("add", "drop_add", 1)]))
+    assert inj.poll("add") == ()           # call 0: nothing
+    assert inj.poll("add")[0].kind == "drop_add"
+    assert inj.count("drop_add") == 1
+
+
+def test_corrupt_stats_is_seeded():
+    s = SufficientStats.zero(K, D)
+    _, bad1 = corrupt_stats(s, 7)
+    c2, bad2 = corrupt_stats(s, 7)
+    np.testing.assert_array_equal(bad1, bad2)
+    assert bool(jnp.any(jnp.isnan(c2.sums)))
+
+
+# --- WAL --------------------------------------------------------------------
+
+def test_wal_append_replay_truncate(tmp_path, corpus):
+    _, stream, _ = corpus
+    wal = AddLog(str(tmp_path))
+    for i, b in enumerate(stream[:4]):
+        assert wal.append(i + 1, b)
+    got = list(wal.replay(after=1))
+    assert [s for s, _ in got] == [2, 3, 4]
+    np.testing.assert_array_equal(got[0][1], stream[1])
+    assert wal.truncate(3) == 3
+    assert wal.seqnos() == [4]
+
+
+def test_wal_log_every_is_the_rpo_knob(tmp_path, corpus):
+    _, stream, _ = corpus
+    wal = AddLog(str(tmp_path), log_every=3)
+    for i, b in enumerate(stream[:6]):
+        wal.append(i + 1, b)
+    assert wal.seqnos() == [1, 4]      # every 3rd batch durable
+    assert wal.skipped == 4
+
+
+# --- durability: kill-and-restore identity ----------------------------------
+
+def test_crash_recovery_bitwise_identity(tmp_path, corpus):
+    """Snapshot mid-stream + crash + restore + WAL replay == the
+    uninterrupted run, bitwise (ids and distances), including the
+    refresh schedule carried through the manifest."""
+    x, stream, q = corpus
+    ref = SearchEngine(_build(x), SCFG)
+    for b in stream:
+        ref.add(b)
+    ids_ref, d_ref = ref.search(q)
+    assert ref.refresh_count == len(stream) // SCFG.refresh_every
+
+    scfg = dataclasses.replace(SCFG, snapshot_dir=str(tmp_path))
+    eng = SearchEngine(_build(x), scfg)
+    for b in stream[:3]:               # odd count: mid refresh-cycle
+        eng.add(b)
+    eng.snapshot()
+    for b in stream[3:]:
+        eng.add(b)
+    del eng                            # crash: live index lost
+
+    assert latest_snapshot_seqno(str(tmp_path)) == 3
+    eng2 = SearchEngine.recover(str(tmp_path), SCFG)
+    assert eng2.counters.wal_records_replayed == len(stream) - 3
+    assert eng2.refresh_count == ref.refresh_count
+    ids2, d2 = eng2.search(q)
+    np.testing.assert_array_equal(np.asarray(ids_ref), np.asarray(ids2))
+    np.testing.assert_array_equal(np.asarray(d_ref), np.asarray(d2))
+
+
+def test_recovery_without_wal_tail(tmp_path, corpus):
+    x, stream, q = corpus
+    scfg = dataclasses.replace(SCFG, snapshot_dir=str(tmp_path))
+    eng = SearchEngine(_build(x), scfg)
+    for b in stream[:4]:
+        eng.add(b)
+    eng.snapshot()
+    ids0, _ = eng.search(q)
+    eng2 = SearchEngine.recover(str(tmp_path), SCFG)
+    assert eng2.counters.wal_records_replayed == 0
+    ids1, _ = eng2.search(q)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+    man = read_manifest(str(tmp_path))
+    assert man["extra"]["refresh_count"] == eng.refresh_count
+
+
+def test_auto_snapshot_schedule(tmp_path, corpus):
+    x, stream, _ = corpus
+    scfg = dataclasses.replace(SCFG, snapshot_dir=str(tmp_path),
+                               snapshot_every=2)
+    eng = SearchEngine(_build(x), scfg)
+    for b in stream[:4]:
+        eng.add(b)
+    assert eng.counters.snapshots_written == 2
+    assert latest_snapshot_seqno(str(tmp_path)) == 4
+    assert eng.wal.seqnos() == []      # covered tail truncated
+
+
+# --- degraded-mode search ladder --------------------------------------------
+
+POL = HealthPolicy(backoff_s=0.0)
+
+
+def test_retry_recovers_from_transient_search_fault(corpus):
+    x, _, q = corpus
+    inj = FaultInjector(FaultPlan([FaultEvent("search", "search_error", 0)]))
+    eng = SearchEngine(_build(x), SCFG, health=POL, faults=inj)
+    ids, dists = eng.search(q)         # first index call fails, retry ok
+    assert eng.counters.retries == 1
+    assert eng.counters.searches_ok >= 1
+    assert np.isfinite(np.asarray(dists)).all()
+    eng.index.faults = None
+    clean = SearchEngine(_build(x), SCFG)
+    np.testing.assert_array_equal(np.asarray(clean.search(q)[0]),
+                                  np.asarray(ids))
+
+
+def test_ladder_reaches_brute_force_on_persistent_faults(corpus):
+    """Every configured search call fails -> the ladder lands on the
+    brute-force oracle; results are still exact."""
+    x, _, q = corpus
+    events = [FaultEvent("search", "search_error", i) for i in range(64)]
+    eng = SearchEngine(_build(x), SCFG, health=POL,
+                       faults=FaultInjector(FaultPlan(events)))
+    ids, dists = eng.search(q[:8])
+    assert eng.counters.brute_fallbacks >= 1
+    assert np.isfinite(np.asarray(dists)).all()
+    eng.index.faults = None
+    ids_ref, _ = eng.index.search_brute(
+        jnp.pad(jnp.asarray(q[:8], eng.index.buckets.dtype),
+                ((0, SCFG.query_batch - 8), (0, 0))), topk=SCFG.topk)
+    np.testing.assert_array_equal(np.asarray(ids),
+                                  np.asarray(ids_ref)[:8])
+
+
+def test_ladder_blackholes_when_everything_fails(corpus):
+    """No rung left: honest (-1, 0.0) rows, still no exception."""
+    x, _, q = corpus
+    events = [FaultEvent("search", "search_error", i) for i in range(64)]
+    pol = HealthPolicy(backoff_s=0.0, brute_fallback=False,
+                       lkg_fallback=False)
+    eng = SearchEngine(_build(x), SCFG, health=pol,
+                       faults=FaultInjector(FaultPlan(events)))
+    ids, dists = eng.search(q[:4])
+    assert eng.counters.blackholed >= 1
+    assert np.all(np.asarray(ids) == -1)
+    assert np.all(np.asarray(dists) == 0.0)
+
+
+def test_nan_stats_repaired_at_refresh(corpus):
+    x, stream, q = corpus
+    plan = FaultPlan([FaultEvent("add", "nan_stats", 0, arg=11)])
+    eng = SearchEngine(_build(x), SCFG, health=POL,
+                       faults=FaultInjector(plan))
+    eng.add(stream[0])
+    assert bool(jnp.any(jnp.isnan(eng.index._pending.sums)))
+    eng.add(stream[1])                 # triggers the guarded refresh
+    assert eng.counters.stats_repaired > 0
+    assert bool(jnp.all(jnp.isfinite(eng.index.centroids)))
+    _, dists = eng.search(q)
+    assert np.isfinite(np.asarray(dists)).all()
+
+
+def test_admission_queue_requeues_failed_adds(corpus):
+    x, stream, _ = corpus
+    plan = FaultPlan([FaultEvent("add", "add_error", i) for i in range(2)])
+    eng = SearchEngine(_build(x), SCFG, health=POL,
+                       faults=FaultInjector(plan))
+    n0 = eng.index.n_total
+    eng.add(stream[0])                 # fails -> parked
+    eng.add(stream[1])                 # drain retries [0] (fails again,
+    #                                    re-parked), new batch fails too
+    assert eng.counters.adds_requeued >= 2
+    eng.add(stream[2])                 # faults exhausted: all applied
+    assert len(eng._pending_adds) == 0
+    assert eng.index.n_total == n0 + 3 * 64
+    assert eng.counters.adds_rejected == 0
+
+
+def test_admission_queue_rejects_when_full(corpus):
+    x, stream, _ = corpus
+    pol = HealthPolicy(backoff_s=0.0, max_pending_adds=1)
+    plan = FaultPlan([FaultEvent("add", "add_error", i) for i in range(8)])
+    eng = SearchEngine(_build(x), SCFG, health=pol,
+                       faults=FaultInjector(plan))
+    for b in stream[:4]:
+        eng.add(b)
+    assert eng.counters.adds_rejected >= 1   # backpressure, not OOM
+    assert len(eng._pending_adds) <= 1
+
+
+def test_dead_cell_reseed(corpus):
+    x, _, _ = corpus
+    index = _build(x)
+    # forge a dead cell: no stored vectors, no evidence
+    index.counts = index.counts.at[3].set(0)
+    index.stats = SufficientStats(index.stats.sums.at[3].set(0.0),
+                                  index.stats.counts.at[3].set(0.0),
+                                  index.stats.inertia)
+    c_before = np.asarray(index.centroids).copy()
+    index.refresh(repair_dead=True)
+    assert index.reseeded_cells == 1
+    assert not np.array_equal(np.asarray(index.centroids)[3], c_before[3])
+    assert bool(jnp.all(jnp.isfinite(index.centroids)))
+    # default refresh never reseeds (bitwise-stable historical behaviour)
+    index2 = _build(x)
+    index2.counts = index2.counts.at[3].set(0)
+    index2.refresh()
+    assert index2.reseeded_cells == 0
+
+
+def test_chaos_never_raises_never_nonfinite(corpus):
+    """The acceptance contract, over several seeded plans: ingest + serve
+    a full stream under injected faults; every search returns, every
+    distance is finite, degradations land in the counters."""
+    x, stream, q = corpus
+    for seed in range(4):
+        inj = FaultInjector(FaultPlan.seeded(seed, n_events=8, horizon=10))
+        eng = SearchEngine(_build(x), SCFG, health=POL, faults=inj)
+        for b in stream:
+            eng.add(b)
+            ids, dists = eng.search(q[:8])
+            assert ids.shape == (8, SCFG.topk)
+            assert np.isfinite(np.asarray(dists)).all(), f"seed {seed}"
+        eng.index.faults = None
+        assert eng.counters.searches_ok > 0
+
+
+@pytest.mark.slow  # ~60 s: long chaos soak across many seeds
+def test_chaos_soak_many_seeds(corpus):
+    x, stream, q = corpus
+    for seed in range(10, 26):
+        inj = FaultInjector(FaultPlan.seeded(seed, n_events=12, horizon=16))
+        eng = SearchEngine(_build(x), SCFG, health=POL, faults=inj)
+        for b in stream:
+            eng.add(b)
+        for lo in range(0, len(q), 8):
+            _, dists = eng.search(q[lo:lo + 8])
+            assert np.isfinite(np.asarray(dists)).all(), f"seed {seed}"
+        eng.index.faults = None
+
+
+def test_lkg_clone_serves_stale_but_sane(corpus):
+    x, stream, q = corpus
+    eng = SearchEngine(_build(x), SCFG, health=POL)
+    assert eng._lkg is not None
+    lkg0 = eng._lkg
+    for b in stream[:2]:
+        eng.add(b)                     # refresh -> new healthy clone
+    assert eng._lkg is not lkg0
+    assert eng._lkg.n_total == eng.index.n_total
+    ids, dists = clone_index(eng.index).search(
+        jnp.asarray(q[:8], eng.index.buckets.dtype), topk=5, nprobe=4)
+    assert np.isfinite(np.asarray(dists)).all()
+
+
+# --- checkpointer manifest validation (satellite c) -------------------------
+
+def test_checkpointer_manifest_validates_restore(tmp_path):
+    from repro.checkpoint.checkpointer import Checkpointer
+    ck = Checkpointer(str(tmp_path), keep=2)
+    state = {"w": jnp.ones((4, 3)), "b": jnp.zeros((3,))}
+    ck.save(3, state, blocking=True)
+    back = ck.restore(3, state)
+    np.testing.assert_array_equal(np.asarray(back["w"]),
+                                  np.asarray(state["w"]))
+    # shape drift -> named mismatch, not a tree/npz explosion
+    with pytest.raises(ValueError, match="'w'"):
+        ck.restore(3, {"w": jnp.ones((5, 3)), "b": jnp.zeros((3,))})
+    # missing key -> clear structural error
+    with pytest.raises(ValueError, match="missing"):
+        ck.restore(3, {"w": jnp.ones((4, 3)), "extra": jnp.zeros((1,))})
