@@ -82,7 +82,7 @@ def rows() -> list[str]:
         ids_live, _ = eng.search(q)
         t0 = time.perf_counter()
         eng2 = SearchEngine.recover(td, scfg)
-        jax.block_until_ready(eng2.index.buckets)
+        eng2.index.block_until_ready()
         us = (time.perf_counter() - t0) * 1e6
         ids_rec, _ = eng2.search(q)
         same = int(np.array_equal(np.asarray(ids_live),

@@ -6,7 +6,17 @@ Public API:
   fused FlashProbe top-L kernel for both nprobe selection and the
   posting-list scan, ``add``/``refresh`` keep the index online via the
   shared ``SufficientStats`` reduction (no refits).
+
+  BucketStore — the posting-list storage layer (``index/store.py``):
+  ``PaddedBucketStore`` (capacity-padded ``(K, cap, d)`` tensor) and
+  ``PagedBucketStore`` (PagedAttention-style page pool + per-cell page
+  tables + free-list allocator + LRU evictor). Selected per index via
+  ``IVFIndex(..., store=...)`` or the ``REPRO_BUCKET_STORE`` env.
 """
 from repro.index.ivf import IVFIndex, recall_at_k
+from repro.index.store import (BucketStore, PaddedBucketStore,
+                               PagedBucketStore, default_store_kind,
+                               make_store)
 
-__all__ = ["IVFIndex", "recall_at_k"]
+__all__ = ["IVFIndex", "recall_at_k", "BucketStore", "PaddedBucketStore",
+           "PagedBucketStore", "default_store_kind", "make_store"]

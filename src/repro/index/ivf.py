@@ -26,14 +26,20 @@ this repo already has:
   and re-centers the coarse centroids via the warm-start
   ``finalize`` M-step — one O(K·d) reduction, never a refit.
 
-Storage layout: posting lists live in a capacity-padded bucket tensor
-``(K, cap, d)`` (the JIT-friendly equivalent of CSR — a fixed-shape
-gather target), with ``bucket_ids (K, cap)`` int32 (-1 padding) and
-``counts (K,)`` list lengths. Padded slots hold a large finite sentinel
-coordinate so their distances are astronomically large but never NaN/inf
-inside the kernel's crossterm — they can only surface when a query
-probes fewer valid candidates than ``topk``, in which case the returned
-id is an honest ``-1``.
+Storage layout: posting-list payloads live behind ``index/store.py``
+(``BucketStore``) — the index never touches a raw bucket tensor. The
+``padded`` backend is the historical capacity-padded ``(K, cap, d)``
+tensor; the ``paged`` backend is a PagedAttention-style flat pool of
+fixed-size pages with per-cell page tables, a free-list allocator, and
+LRU eviction under a byte budget (resident memory ~ occupied pages, not
+``K * max_cell_cap``). Padded slots in either layout hold a large finite
+sentinel coordinate so their distances are astronomically large but
+never NaN/inf inside the kernel's crossterm — they can only surface when
+a query probes fewer valid candidates than ``topk``, in which case the
+returned id is an honest ``-1``. Search gathers are capped at the
+store's *occupied* width (``gather_width``, a power-of-two bucket), so
+the candidate block — and the plan-cache key — track occupancy instead
+of physical capacity.
 
 **Sharded FlashIVF** (``pctx`` — a ``core.parallel.ParallelContext``):
 cells are partitioned over the mesh's ``cells`` axis — each shard owns
@@ -65,15 +71,14 @@ from repro.core.chunked import ChunkedKMeans
 from repro.core.init import init_centroids
 from repro.core.kmeans import KMeans, KMeansConfig
 from repro.core.streaming import SufficientStats
+from repro.index import store as _store
 from repro.kernels import ops, ref
 from repro.reliability.faults import InjectedFault, corrupt_stats
 
 Array = jax.Array
 
-# Padded-slot coordinate: large enough that a padded candidate can never
-# beat a real one, small enough that d * _PAD^2 stays finite in f32 for
-# any realistic d (no inf - inf = NaN risk in the crossterm score).
-_PAD_COORD = 1e15
+# Padded-slot coordinate (see index/store.py, the storage layer).
+_PAD_COORD = _store._PAD_COORD
 
 
 def _round_up(v: int, mult: int) -> int:
@@ -133,26 +138,28 @@ def _train_sharded(pctx, cfg: KMeansConfig, key, x: Array
     return c, a[:n], m[:n]
 
 
-@functools.partial(jax.jit, static_argnames=("topk", "nprobe", "bqn", "bqk",
-                                             "bsb", "bsc", "interpret"))
-def _ivf_search(q: Array, centroids: Array, buckets: Array,
-                bucket_ids: Array, *, topk: int, nprobe: int, bqn: int,
-                bqk: int, bsb: int, bsc: int, interpret: bool | None
-                ) -> tuple[Array, Array]:
+@functools.partial(jax.jit, static_argnames=("kind", "topk", "nprobe",
+                                             "width", "ps", "nsh", "bqn",
+                                             "bqk", "bsb", "bsc",
+                                             "interpret"))
+def _ivf_search(q: Array, centroids: Array, store_arrays: tuple, *,
+                kind: str, topk: int, nprobe: int, width: int, ps: int,
+                nsh: int, bqn: int, bqk: int, bsb: int, bsc: int,
+                interpret: bool | None) -> tuple[Array, Array]:
     """Batched two-stage IVF search, fully fused (one jit per geometry).
 
     Stage 1: FlashProbe over the coarse centroids -> (B, nprobe) cells.
-    Stage 2: gather the probed buckets and scan each query against its
-    own ``nprobe * cap`` candidate block with the grouped probe kernel
+    Stage 2: gather each probed cell's candidates through the store
+    (``gather_global`` — padded slice or page-table indirection), capped
+    at ``width`` occupied slots per cell, and scan each query against
+    its own ``nprobe * width`` block with the grouped probe kernel
     (query tiles, one launch for the whole batch).
     """
-    b, d = q.shape
-    cap = buckets.shape[1]
     probe, _ = ops.flash_probe(q, centroids.astype(q.dtype), l=nprobe,
                                block_n=bqn, block_k=bqk,
                                interpret=interpret, want_dists=False)
-    cand_x = buckets[probe].reshape(b, nprobe * cap, d)       # (B, C, d)
-    cand_ids = bucket_ids[probe].reshape(b, nprobe * cap)     # (B, C)
+    cand_x, cand_ids = _store.gather_global(kind, store_arrays, probe,
+                                            width, ps, nsh)
     li, dist = ops.flash_probe_grouped(q, cand_x, l=topk,
                                        block_b=bsb, block_c=bsc,
                                        interpret=interpret)   # (B, topk)
@@ -168,37 +175,38 @@ class IVFIndex:
     >>> index.add(x_new)                 # FlashAssign + list append
     >>> index.refresh()                  # warm-start re-center, O(K d)
     >>> ids_ref, _ = index.search_brute(q, topk=10)   # exactness oracle
+
+    ``store`` selects the posting-list backend ("padded" | "paged",
+    default from ``REPRO_BUCKET_STORE``); an already-built
+    ``BucketStore`` instance is also accepted.
     """
 
     def __init__(self, centroids: Array, capacity: int, *,
                  max_cap: int | None = None,
                  interpret: bool | None = None,
                  planner: "_plan.KernelPlanner | None" = None,
-                 pctx=None):
+                 pctx=None, store: "str | _store.BucketStore | None" = None,
+                 page_size: int | None = None,
+                 store_bytes: int | None = None):
         k, d = centroids.shape
         self.centroids = centroids
         self.k, self.d = k, d
-        self.cap = max(8, _round_up(capacity, 8))
-        # memory budget: posting lists never grow past max_cap slots per
-        # cell — overflow rows spill (counted, not stored) instead of
-        # doubling the bucket tensor until the device OOMs
-        self.max_cap = None if max_cap is None \
-            else max(8, _round_up(max_cap, 8))
-        if self.max_cap is not None:
-            self.cap = min(self.cap, self.max_cap)
         self.interpret = interpret
         self.pctx = pctx
+        n_shards = 1
         if pctx is not None and pctx.k_axis is not None:
             pctx.k_local(k)   # raises unless K divides the cells axis
-        dt = centroids.dtype
-        self.buckets = jnp.full((k, self.cap, d), _PAD_COORD, dt)
-        self.bucket_ids = jnp.full((k, self.cap), -1, jnp.int32)
-        self.counts = jnp.zeros((k,), jnp.int32)
+            n_shards = pctx.n_k_shards
+        if isinstance(store, _store.BucketStore):
+            self.store = store
+        else:
+            self.store = _store.make_store(
+                store, k, d, centroids.dtype, capacity=int(capacity),
+                max_cap=max_cap, page_size=page_size,
+                max_bytes=store_bytes, n_shards=n_shards)
         self.n_total = 0
-        # reliability state: spill accounting (graceful capacity
-        # degradation), the optional fault injector, and repair counters
-        self.spilled = 0
-        self.spill_counts = np.zeros(k, np.int64)
+        # reliability state: the optional fault injector and repair
+        # counters (spill/evict accounting lives in the store)
         self.faults = None          # a reliability.faults.FaultInjector
         self.repaired_cells = 0     # NaN stats rows zeroed by refresh
         self.reseeded_cells = 0     # dead cells re-seeded by refresh
@@ -220,6 +228,67 @@ class IVFIndex:
         self._place()
 
     # ------------------------------------------------------------------
+    # store views (the only raw-tensor access path is index/store.py)
+    # ------------------------------------------------------------------
+
+    @property
+    def dtype(self):
+        return self.store.dtype
+
+    @property
+    def cap(self) -> int:
+        """Physical slots per cell (padded: ``cap``; paged: table width
+        in pages times the page size)."""
+        return self.store.capacity
+
+    @property
+    def max_cap(self) -> int | None:
+        return self.store.max_cap
+
+    @property
+    def counts(self) -> Array:
+        return self.store.counts
+
+    @counts.setter
+    def counts(self, v) -> None:
+        self.store.set_counts(v)
+
+    @property
+    def spilled(self) -> int:
+        return self.store.spilled
+
+    @spilled.setter
+    def spilled(self, v) -> None:
+        self.store.spilled = int(v)
+
+    @property
+    def spill_counts(self) -> np.ndarray:
+        return self.store.spill_counts
+
+    @spill_counts.setter
+    def spill_counts(self, v) -> None:
+        self.store.spill_counts = np.asarray(v, np.int64)
+
+    @property
+    def evicted(self) -> int:
+        return self.store.evicted
+
+    @property
+    def evict_counts(self) -> np.ndarray:
+        return self.store.evict_counts
+
+    @property
+    def store_kind(self) -> str:
+        return self.store.kind
+
+    def resident_bytes(self) -> int:
+        """Device bytes held by the posting-list payload (+ tables)."""
+        return self.store.resident_bytes()
+
+    def block_until_ready(self) -> None:
+        self.store.block_until_ready()
+
+    # ------------------------------------------------------------------
     # sharding plumbing (no-ops without a k-sharded ParallelContext)
     # ------------------------------------------------------------------
 
@@ -234,17 +303,16 @@ class IVFIndex:
 
     def _place(self) -> None:
         """Pin the index state onto the mesh: each shard owns K/P_k
-        cells — centroids, padded buckets, ids, counts and the running
-        ``SufficientStats`` slices all partitioned over the cells axis.
-        Host-side mutations (append / grow / refresh) call this again so
-        placement survives functional updates."""
+        cells — centroids, the store's payload (padded buckets, or the
+        page pool + tables), counts and the running ``SufficientStats``
+        slices all partitioned over the cells axis. Host-side mutations
+        (append / grow / refresh) call this again so placement survives
+        functional updates."""
         if not self._k_sharded:
             return
         pctx, ka = self.pctx, self.pctx.k_axis
         self.centroids = pctx.put(self.centroids, P(ka, None))
-        self.buckets = pctx.put(self.buckets, P(ka, None, None))
-        self.bucket_ids = pctx.put(self.bucket_ids, P(ka, None))
-        self.counts = pctx.put(self.counts, P(ka))
+        self.store.place(pctx)
         place = lambda st: SufficientStats(
             pctx.put(st.sums, P(ka, None)), pctx.put(st.counts, P(ka)),
             st.inertia)
@@ -262,7 +330,9 @@ class IVFIndex:
               chunk_size: int | None = None,
               seed: int = 0, interpret: bool | None = None,
               planner: "_plan.KernelPlanner | None" = None,
-              pctx=None) -> "IVFIndex":
+              pctx=None, store: "str | None" = None,
+              page_size: int | None = None,
+              store_bytes: int | None = None) -> "IVFIndex":
         """Train coarse centroids and invert the corpus into posting lists.
 
         ``x``: (N, d) array — or, with ``chunk_size`` set, a host numpy
@@ -281,6 +351,9 @@ class IVFIndex:
         loop (the corpus doesn't fit on the mesh by assumption); the
         mesh applies to everything after it — the per-chunk ``add``
         inversion passes, placement, and serving.
+
+        ``store`` / ``page_size`` / ``store_bytes`` select and size the
+        posting-list backend (see ``index/store.py``).
         """
         cfg = KMeansConfig(k=k, max_iters=max_iters, init=init, tol=tol,
                            step_impl=step_impl, interpret=interpret,
@@ -301,7 +374,9 @@ class IVFIndex:
             cap = capacity if capacity is not None else int(
                 jnp.max(jnp.bincount(a, length=k)))
             index = cls(centroids, cap, max_cap=max_cap,
-                        interpret=interpret, planner=planner, pctx=pctx)
+                        interpret=interpret, planner=planner, pctx=pctx,
+                        store=store, page_size=page_size,
+                        store_bytes=store_bytes)
             index._fold(xj, a, m)
         else:
             # out-of-core: ChunkedKMeans trains (init from the first
@@ -312,7 +387,8 @@ class IVFIndex:
             centroids, _ = driver.fit(x, c0)
             index = cls(centroids, capacity if capacity is not None else 8,
                         max_cap=max_cap, interpret=interpret,
-                        planner=planner, pctx=pctx)
+                        planner=planner, pctx=pctx, store=store,
+                        page_size=page_size, store_bytes=store_bytes)
             for chunk in driver._chunks(x):
                 index.add(chunk)
         # build-time evidence is the committed baseline, not drift:
@@ -340,7 +416,7 @@ class IVFIndex:
         statistics arrive pre-reduced through the same O(K·d) psum tree
         as every other driver — already partitioned over the cells axis.
         """
-        x_new = jnp.asarray(x_new, self.buckets.dtype)
+        x_new = jnp.asarray(x_new, self.dtype)
         nan_evs: tuple = ()
         if self.faults is not None:   # injection seam (reliability.faults)
             evs = self.faults.poll("add")
@@ -415,7 +491,7 @@ class IVFIndex:
     def _batch_blocks(self, n: int):
         """Assign/update tiles for an ``n``-row batch (planner-cached)."""
         return self.planner.block_config(
-            n, self.k, self.d, jnp.dtype(self.buckets.dtype).itemsize)
+            n, self.k, self.d, jnp.dtype(self.dtype).itemsize)
 
     def _fold(self, x: Array, a: Array, m: Array) -> None:
         """Append a pre-assigned batch and account its statistics."""
@@ -505,73 +581,52 @@ class IVFIndex:
     def _append(self, x: Array, a: Array) -> None:
         """Append a batch in CSR order (sort-inverse, no per-point logic).
 
-        When growth is capped (``max_cap``) and a cell is full, its
-        overflow rows **spill**: they are counted per-cell
-        (``spill_counts``/``spilled``) but not stored — graceful
-        degradation of recall under a fixed memory budget instead of an
-        unbounded doubling. Ids stay monotone (spilled rows consume ids
+        The store computes slots and handles growth / page allocation /
+        spill / eviction; ids stay monotone (spilled rows consume ids
         too), so WAL replay reproduces identical ids either way.
         """
         n = x.shape[0]
         if n == 0:
             return
-        order, offsets = csr_from_assignments(a, self.k)
-        a_sorted = jnp.take(a, order)
-        rank = jnp.arange(n, dtype=jnp.int32) - jnp.take(offsets, a_sorted)
-        slot = jnp.take(self.counts, a_sorted) + rank
-        needed = int(jnp.max(slot)) + 1
-        if needed > self.cap:
-            self._grow(needed)
-        ids_new = (self.n_total + order).astype(jnp.int32)
-        x_sorted = jnp.take(x, order, axis=0).astype(self.buckets.dtype)
-        if needed > self.cap:   # max_cap reached: spill the overflow
-            keep = np.asarray(slot < self.cap)
-            lost = np.asarray(a_sorted)[~keep]
-            self.spill_counts += np.bincount(
-                lost, minlength=self.k).astype(np.int64)
-            self.spilled += int(lost.size)
-            keep_j = jnp.asarray(np.flatnonzero(keep), jnp.int32)
-            a_sorted = jnp.take(a_sorted, keep_j)
-            slot = jnp.take(slot, keep_j)
-            ids_new = jnp.take(ids_new, keep_j)
-            x_sorted = jnp.take(x_sorted, keep_j, axis=0)
-            add_counts = jnp.bincount(a_sorted, length=self.k)
-        else:
-            add_counts = jnp.bincount(a, length=self.k)
-        self.buckets = self.buckets.at[a_sorted, slot].set(x_sorted)
-        self.bucket_ids = self.bucket_ids.at[a_sorted, slot].set(ids_new)
-        self.counts = self.counts + add_counts.astype(jnp.int32)
+        order, _ = csr_from_assignments(a, self.k)
+        a_sorted = np.asarray(jnp.take(a, order))
+        ids_new = (self.n_total + np.asarray(order)).astype(np.int32)
+        x_sorted = jnp.take(x, order, axis=0)
+        self.store.append(a_sorted, x_sorted, ids_new)
         self.n_total += n
-
-    def _grow(self, needed: int) -> None:
-        """Grow posting-list capacity (amortized doubling, host-side),
-        clamped to the ``max_cap`` memory budget when one is set."""
-        new_cap = max(_round_up(needed, 8), 2 * self.cap)
-        if self.max_cap is not None:
-            new_cap = min(new_cap, self.max_cap)
-        if new_cap <= self.cap:
-            return
-        pad = new_cap - self.cap
-        self.buckets = jnp.pad(self.buckets, ((0, 0), (0, pad), (0, 0)),
-                               constant_values=_PAD_COORD)
-        self.bucket_ids = jnp.pad(self.bucket_ids, ((0, 0), (0, pad)),
-                                  constant_values=-1)
-        self.cap = new_cap
 
     # ------------------------------------------------------------------
     # queries
     # ------------------------------------------------------------------
+
+    def _gather_width(self, topk: int, nprobe: int) -> int:
+        """The store's occupied per-cell candidate width for a geometry
+        (>= ceil(topk/nprobe) so the scan's top-k always fits)."""
+        return self.store.gather_width(-(-int(topk) // max(1, int(nprobe))))
+
+    def search_geometry(self, topk: int = 10, nprobe: int = 8) -> tuple:
+        """Cheap geometry fingerprint for serving layers: it changes
+        exactly when cached search programs would re-key (the store's
+        occupancy crossed a ``gather_width`` bucket), so a scheduler can
+        re-pin its plans only then."""
+        nprobe = min(nprobe, self.k)
+        width = self._gather_width(topk, nprobe)
+        if self._k_sharded:
+            return (nprobe, topk, width, self.pctx.n_k_shards)
+        return (nprobe, topk, width)
 
     def plan_search(self, b: int, topk: int = 10, nprobe: int = 8
                     ) -> tuple[int, int, int, int]:
         """Plan (and cache) the two search-stage kernels for a geometry.
 
         Returns ``(bqn, bqk, bsb, bsc)`` — probe and scan tiles for a
-        ``(b, d)`` query batch at this index's current ``(k, cap)``. The
-        plan is cached on the index per ``(b, nprobe, topk, cap)`` (cap
-        growth changes the candidate block and naturally re-keys), so the
-        per-call chooser recompute this method replaces can never return
-        to the hot path. Serving layers with a fixed padded batch shape
+        ``(b, d)`` query batch at this index's current ``(k, width)``,
+        where ``width`` is the store's occupied gather width (a
+        power-of-two bucket — occupancy growth changes the candidate
+        block and naturally re-keys). The plan is cached on the index per
+        ``(b, nprobe, topk, width)``, so the per-call chooser recompute
+        this method replaces can never return to the hot path. Serving
+        layers with a fixed padded batch shape
         (``serve.engine.SearchEngine``) call this once at config time.
 
         Under a k-sharded ``pctx`` both stages are planned at the
@@ -581,22 +636,23 @@ class IVFIndex:
         size tiles for a kernel that never runs).
         """
         nprobe = min(nprobe, self.k)
+        width = self._gather_width(topk, nprobe)
         if self._k_sharded:
             kl = self.pctx.k_local(self.k)
-            ll = min(nprobe, kl)           # max owned cells one query probes
-            li = min(topk, ll * self.cap)  # local result-list length
-            pd = self.pctx.n_data_shards   # queries are data-sharded too
+            ll = min(nprobe, kl)          # max owned cells one query probes
+            li = min(topk, ll * width)    # local result-list length
+            pd = self.pctx.n_data_shards  # queries are data-sharded too
             bl = max(1, ((int(b) + pd - 1) // pd))
-            geom = (int(b), nprobe, int(topk), self.cap, self.pctx.n_k_shards)
+            geom = (int(b), nprobe, int(topk), width, self.pctx.n_k_shards)
             probe_shape = (bl, kl, self.d, ll)
-            scan_shape = (bl, ll * self.cap, self.d, li)
+            scan_shape = (bl, ll * width, self.d, li)
         else:
-            geom = (int(b), nprobe, int(topk), self.cap)
+            geom = (int(b), nprobe, int(topk), width)
             probe_shape = (b, self.k, self.d, nprobe)
-            scan_shape = (b, nprobe * self.cap, self.d, topk)
+            scan_shape = (b, nprobe * width, self.d, topk)
         plans = self._search_plans.get(geom)
         if plans is None:
-            dt = self.buckets.dtype
+            dt = self.dtype
             probe = self.planner.plan("probe", probe_shape, dt)
             scan = self.planner.plan("scan", scan_shape, dt)
             plans = (*probe.blocks, *scan.blocks)
@@ -611,7 +667,7 @@ class IVFIndex:
         ``nprobe = k`` probes every cell: the result is exactly the
         brute-force top-k over all indexed vectors.
         """
-        q = jnp.asarray(q, self.buckets.dtype)
+        q = jnp.asarray(q, self.dtype)
         nprobe = min(nprobe, self.k)
         cand = nprobe * self.cap
         if topk > cand:
@@ -637,9 +693,13 @@ class IVFIndex:
             return self._search_sharded(q, topk, nprobe,
                                         shard_ok=shard_ok)
         bqn, bqk, bsb, bsc = self.plan_search(q.shape[0], topk, nprobe)
-        return _ivf_search(q, self.centroids, self.buckets, self.bucket_ids,
-                           topk=topk, nprobe=nprobe, bqn=bqn, bqk=bqk,
-                           bsb=bsb, bsc=bsc, interpret=self.interpret)
+        st = self.store
+        return _ivf_search(q, self.centroids, st.device_arrays(),
+                           kind=st.kind, topk=topk, nprobe=nprobe,
+                           width=self._gather_width(topk, nprobe),
+                           ps=st.page_param, nsh=st.n_shards,
+                           bqn=bqn, bqk=bqk, bsb=bsb, bsc=bsc,
+                           interpret=self.interpret)
 
     def _search_sharded(self, q: Array, topk: int, nprobe: int,
                         shard_ok=None) -> tuple[Array, Array]:
@@ -661,7 +721,7 @@ class IVFIndex:
         b_pad = ((b + pd - 1) // pd) * pd
         if b_pad != b:
             q = jnp.pad(q, ((0, b_pad - b), (0, 0)))
-        key = (b_pad, nprobe, topk, self.cap)
+        key = (b_pad, nprobe, topk, self._gather_width(topk, nprobe))
         prog = self._sharded_search.get(key)
         if prog is None:
             prog = self._make_sharded_search(b_pad, topk, nprobe)
@@ -669,7 +729,7 @@ class IVFIndex:
         if shard_ok is None:
             shard_ok = np.ones(pctx.n_k_shards, bool)
         ids, dists = prog(pctx.shard_points(q), self.centroids,
-                          self.buckets, self.bucket_ids,
+                          *self.store.device_arrays(),
                           jnp.asarray(shard_ok))
         return ids[:b], dists[:b]
 
@@ -677,13 +737,16 @@ class IVFIndex:
         pctx = self.pctx
         ka = pctx.k_axis
         k_local = pctx.k_local(self.k)
-        cap, d = self.cap, self.d
+        st = self.store
+        kind, ps = st.kind, st.page_param
+        width = self._gather_width(topk, nprobe)
         ll = min(nprobe, k_local)       # a query probes <= ll owned cells
-        li = min(topk, ll * cap)        # local result-list length
+        li = min(topk, ll * width)      # local result-list length
         bqn, bqk, bsb, bsc = self.plan_search(b_pad, topk, nprobe)
         interpret = self.interpret
 
-        def shard_fn(q, c_local, buckets, bucket_ids, shard_ok):
+        def shard_fn(q, c_local, *rest):
+            *arrays, shard_ok = rest
             bl = q.shape[0]             # per-data-shard query slice
             # a dead shard (reliability seam) contributes to neither merge
             alive = shard_ok[jax.lax.axis_index(ka)]
@@ -698,7 +761,8 @@ class IVFIndex:
                                        valid=alive)   # (bl, nprobe)
             # stage 2: compact this shard's owned probed cells (stable:
             # global probe order preserved) into a fixed (bl, ll) block;
-            # non-owned slots point at the padding cell k_local
+            # non-owned slots point at the padding cell k_local, which
+            # the store's gather maps onto padding slots
             rel = gcell - lo
             owned = jnp.logical_and(rel >= 0, rel < k_local)
             pos = jax.lax.broadcasted_iota(jnp.int32, (bl, nprobe), 1)
@@ -707,13 +771,8 @@ class IVFIndex:
             cell = jnp.take_along_axis(rel, order, axis=1)
             ok = jnp.take_along_axis(owned, order, axis=1)
             cell = jnp.where(ok, cell, k_local)
-            bpad = jnp.concatenate(
-                [buckets, jnp.full((1, cap, d), _PAD_COORD,
-                                   buckets.dtype)], axis=0)
-            ipad = jnp.concatenate(
-                [bucket_ids, jnp.full((1, cap), -1, jnp.int32)], axis=0)
-            cand_x = bpad[cell].reshape(bl, ll * cap, d)
-            cand_ids = ipad[cell].reshape(bl, ll * cap)
+            cand_x, cand_ids = _store.gather_cells(kind, tuple(arrays),
+                                                   cell, width, ps)
             # stage 3: local grouped scan of the owned buckets (payloads
             # stay on-shard), then the global top-k merge — O(b·topk).
             # The tie key is each candidate's *global probe-rank-major*
@@ -725,8 +784,8 @@ class IVFIndex:
                 q, cand_x, l=li, block_b=bsb, block_c=bsc,
                 interpret=interpret, want_dists=False)
             ids_loc = jnp.take_along_axis(cand_ids, lidx, axis=1)
-            gpos = (jnp.take_along_axis(order, lidx // cap, axis=1) * cap
-                    + lidx % cap)
+            gpos = (jnp.take_along_axis(order, lidx // width, axis=1)
+                    * width + lidx % width)
             gids, gval = pctx.merge_topl(ids_loc, lval, topk, tie=gpos,
                                          valid=alive)
             q32 = q.astype(jnp.float32)
@@ -739,17 +798,16 @@ class IVFIndex:
 
         fn = pctx.spmd(
             shard_fn,
-            in_specs=(pctx.data_spec, P(ka, None), P(ka, None, None),
-                      P(ka, None), P(None)),
+            in_specs=(pctx.data_spec, P(ka, None),
+                      *st.shard_specs(ka), P(None)),
             out_specs=(P(pctx.data_axes, None), P(pctx.data_axes, None)))
         return jax.jit(fn)
 
     def search_brute(self, q, topk: int = 10) -> tuple[Array, Array]:
         """Dense brute-force reference over every indexed vector (the
         exactness/recall oracle — materializes the full score matrix)."""
-        q = jnp.asarray(q, self.buckets.dtype)
-        flat_x = self.buckets.reshape(self.k * self.cap, self.d)
-        flat_ids = self.bucket_ids.reshape(self.k * self.cap)
+        q = jnp.asarray(q, self.dtype)
+        flat_x, flat_ids = self.store.flat()
         idx, dists = ref.probe_ref(q, flat_x, topk)
         return jnp.take(flat_ids, idx), dists
 
@@ -760,8 +818,8 @@ class IVFIndex:
     def save(self, directory: str, *, seqno: int = 0,
              extra: dict | None = None) -> str:
         """Atomic, mesh-agnostic snapshot of the full index state
-        (buckets, ids, counts, committed + pending stats, plan cache) —
-        see ``reliability.snapshot.save_index``. ``seqno`` marks the
+        (store payload, counts, committed + pending stats, plan cache)
+        — see ``reliability.snapshot.save_index``. ``seqno`` marks the
         WAL position this snapshot covers."""
         from repro.reliability.snapshot import save_index
         return save_index(self, directory, seqno=seqno, extra=extra)
@@ -771,7 +829,8 @@ class IVFIndex:
              planner: "_plan.KernelPlanner | None" = None,
              interpret: bool | None = None) -> "IVFIndex":
         """Restore a snapshot onto any mesh (or none): arrays are stored
-        unsharded, placement is re-derived from ``pctx``."""
+        unsharded in canonical form, placement is re-derived from
+        ``pctx``."""
         from repro.reliability.snapshot import load_index
         return load_index(directory, seqno=seqno, pctx=pctx,
                           planner=planner, interpret=interpret)
@@ -783,9 +842,10 @@ class IVFIndex:
     def posting_lists(self) -> tuple[Array, Array]:
         """The CSR view ``(ids, offsets)``: list ``j`` is
         ``ids[offsets[j]:offsets[j+1]]`` (insertion order preserved)."""
-        valid = (jax.lax.broadcasted_iota(jnp.int32, self.bucket_ids.shape, 1)
+        dense_ids = self.store.dense_ids()
+        valid = (jax.lax.broadcasted_iota(jnp.int32, dense_ids.shape, 1)
                  < self.counts[:, None])
-        ids = self.bucket_ids[valid]          # row-major == cluster-major
+        ids = dense_ids[valid]               # row-major == cluster-major
         offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                                    jnp.cumsum(self.counts)]).astype(jnp.int32)
         return ids, offsets
@@ -807,4 +867,4 @@ class IVFIndex:
         shard = (f", cells_sharded x{self.pctx.n_k_shards}"
                  if self._k_sharded else "")
         return (f"IVFIndex(k={self.k}, d={self.d}, n={self.n_total}, "
-                f"cap={self.cap}{shard})")
+                f"cap={self.cap}, store={self.store.kind}{shard})")

@@ -1,0 +1,755 @@
+"""BucketStore — the one storage layer under FlashIVF posting lists.
+
+Every byte of posting-list payload in the index lives behind this
+abstraction; no other module touches a raw bucket tensor (grep-enforced,
+like the shard_map rule in ``core/parallel.py``). Two implementations
+share one contract:
+
+- ``PaddedBucketStore`` — the historical layout: one capacity-padded
+  ``(K, cap, d)`` tensor plus ``(K, cap)`` int32 ids, amortized-doubling
+  growth, ``max_cap`` spill budget. Simple, gather-friendly, but
+  resident memory scales with ``K * max_cell_size``: one hot cell
+  doubles the whole array.
+
+- ``PagedBucketStore`` — vLLM/PagedAttention-style block storage: all
+  cells share one flat pool of fixed-size ``(page_size, d)`` pages, each
+  cell maps its slots through a per-cell page table of int32 *local*
+  page ids, and pages come from a per-shard free-list allocator
+  (deterministic: lowest id first). Resident memory scales with
+  *occupied* pages (~``n_total / page_size`` plus one partial page per
+  non-empty cell), not ``K * max_cell_cap``. Under an optional byte
+  budget (``max_bytes``) an LRU evictor frees the coldest cells' pages
+  (write-recency clock, bumped per append batch); evicted rows are
+  counted per cell (``evict_counts``/``evicted``) the same way
+  ``max_cap`` overflow spills are.
+
+Under a K-sharded ``ParallelContext`` each shard owns a contiguous
+``pages_per_shard`` slice of the pool (page ids are shard-local, so the
+pool partitions over the cells axis with plain ``PartitionSpec``s and
+payloads never migrate); local page id 0 of every shard is a reserved
+padding page (``_PAD_COORD`` coordinates, ``-1`` ids), which is also
+what unmapped page-table entries point at — a gather through the table
+can never read stale or foreign data.
+
+Search-side gathers are planner-friendly: ``gather_width`` returns the
+per-cell candidate width snapped to a power-of-two bucket of the max
+*occupied* cell size (padded: slots; paged: pages), so the jitted search
+re-keys only when occupancy crosses a bucket boundary — and the dense
+candidate block is capped at what is actually mapped instead of the full
+physical capacity.
+
+Snapshots are canonical and mesh-agnostic: ``state_arrays`` serializes
+occupied pages packed in cell-major page order (never the raw pool, so a
+fragmented free list or a different shard count never leaks into the
+artifact), and ``restore_store`` re-allocates them deterministically.
+Logical content — per-cell rows in slot order — round-trips exactly, so
+restored searches are bitwise-identical.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+Array = jax.Array
+
+# Padded-slot coordinate: large enough that a padded candidate can never
+# beat a real one, small enough that d * _PAD^2 stays finite in f32 for
+# any realistic d (no inf - inf = NaN risk in the crossterm score).
+_PAD_COORD = 1e15
+
+STORE_KINDS = ("padded", "paged")
+
+
+def _round_up(v: int, mult: int) -> int:
+    return ((v + mult - 1) // mult) * mult
+
+
+def _pow2ceil(v: int) -> int:
+    return 1 << max(0, int(v) - 1).bit_length()
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-int(a) // int(b))
+
+
+def default_store_kind() -> str:
+    """The process-wide default backend (``REPRO_BUCKET_STORE`` env)."""
+    kind = os.environ.get("REPRO_BUCKET_STORE", "padded").strip().lower()
+    if kind not in STORE_KINDS:
+        raise ValueError(f"REPRO_BUCKET_STORE={kind!r}: "
+                         f"expected one of {STORE_KINDS}")
+    return kind
+
+
+def make_store(kind: str | None, k: int, d: int, dtype, *, capacity: int = 8,
+               max_cap: int | None = None, page_size: int | None = None,
+               max_bytes: int | None = None, n_shards: int = 1
+               ) -> "BucketStore":
+    kind = kind or default_store_kind()
+    if kind == "padded":
+        return PaddedBucketStore(k, d, dtype, capacity=capacity,
+                                 max_cap=max_cap)
+    if kind == "paged":
+        return PagedBucketStore(k, d, dtype, capacity=capacity,
+                                max_cap=max_cap,
+                                page_size=page_size or 64,
+                                max_bytes=max_bytes, n_shards=n_shards)
+    raise ValueError(f"unknown bucket store kind {kind!r}")
+
+
+def restore_store(host: dict, meta: dict, *, k: int, d: int, dtype,
+                  n_shards: int = 1) -> "BucketStore":
+    """Rebuild a store from snapshot arrays + manifest meta (any mesh)."""
+    kind = meta.get("kind", "padded")
+    if kind == "padded":
+        return PaddedBucketStore.restore(host, meta, k=k, d=d, dtype=dtype)
+    if kind == "paged":
+        return PagedBucketStore.restore(host, meta, k=k, d=d, dtype=dtype,
+                                        n_shards=n_shards)
+    raise ValueError(f"unknown bucket store kind {kind!r}")
+
+
+def infer_store_meta(host: dict, meta: dict) -> dict:
+    """Best-effort store meta for snapshots whose manifest doesn't cover
+    them (an older seqno than the manifest records): scalars re-derived
+    from the array shapes, the same contract the padded layout always
+    had."""
+    if "buckets" in host:
+        return {"kind": "padded", "cap": int(host["buckets"].shape[1]),
+                "max_cap": meta.get("max_cap"),
+                "spilled": int(host["spill_counts"].sum())}
+    cell_pages = host["cell_pages"]
+    ps = int(host["pool_pages"].shape[1])
+    return {"kind": "paged", "page_size": ps,
+            "maxp": max(1, int(cell_pages.max()) if cell_pages.size else 1),
+            "pps": 0, "n_shards": 1, "max_cap": meta.get("max_cap"),
+            "max_bytes": None,
+            "spilled": int(host["spill_counts"].sum()),
+            "evicted": int(host["evict_counts"].sum()),
+            "tick": int(host["last_touch"].max())
+            if host["last_touch"].size else 0}
+
+
+# ---------------------------------------------------------------------------
+# jit-side candidate gathers (called from inside the search programs)
+# ---------------------------------------------------------------------------
+
+def gather_global(kind: str, arrays, probe: Array, width: int,
+                  page_size: int, n_shards: int) -> tuple[Array, Array]:
+    """Materialize the probed candidate block on a whole (unsharded)
+    store: ``probe (B, nprobe)`` cells -> ``(cand_x (B, nprobe*width, d),
+    cand_ids (B, nprobe*width))``. ``width`` slots per cell (a
+    ``gather_width`` bucket), so the block is capped at occupied
+    capacity, not physical capacity."""
+    b, nprobe = probe.shape
+    if kind == "padded":
+        buckets, bucket_ids = arrays
+        d = buckets.shape[-1]
+        cand_x = buckets[:, :width][probe].reshape(b, nprobe * width, d)
+        cand_ids = bucket_ids[:, :width][probe].reshape(b, nprobe * width)
+        return cand_x, cand_ids
+    pool, pool_ids, tables = arrays
+    d = pool.shape[-1]
+    wp = width // page_size
+    pps = pool.shape[0] // n_shards
+    cps = tables.shape[0] // n_shards
+    # shard-local page ids -> global pool rows; unmapped entries are 0 =
+    # the owning shard's reserved padding page
+    pid = ((probe // cps)[:, :, None] * pps
+           + tables[:, :wp][probe]).reshape(b, nprobe * wp)
+    cand_x = pool[pid].reshape(b, nprobe * wp * page_size, d)
+    cand_ids = pool_ids[pid].reshape(b, nprobe * wp * page_size)
+    return cand_x, cand_ids
+
+
+def gather_cells(kind: str, arrays, cell: Array, width: int,
+                 page_size: int) -> tuple[Array, Array]:
+    """Shard-local candidate gather inside a shard_map'd search program:
+    ``cell (bl, ll)`` holds *local* cell indices with ``k_local`` as the
+    not-owned padding cell. Arrays are this shard's owned blocks."""
+    bl, ll = cell.shape
+    if kind == "padded":
+        buckets, bucket_ids = arrays
+        k_local, _, d = buckets.shape
+        bpad = jnp.concatenate(
+            [buckets[:, :width],
+             jnp.full((1, width, d), _PAD_COORD, buckets.dtype)], axis=0)
+        ipad = jnp.concatenate(
+            [bucket_ids[:, :width],
+             jnp.full((1, width), -1, jnp.int32)], axis=0)
+        return (bpad[cell].reshape(bl, ll * width, d),
+                ipad[cell].reshape(bl, ll * width))
+    pool, pool_ids, tables = arrays
+    d = pool.shape[-1]
+    wp = width // page_size
+    # the padding cell maps every slot onto local page 0 — this shard's
+    # reserved padding page, same as any unmapped table entry
+    tpad = jnp.concatenate(
+        [tables[:, :wp], jnp.zeros((1, wp), jnp.int32)], axis=0)
+    pid = tpad[cell].reshape(bl, ll * wp)
+    return (pool[pid].reshape(bl, ll * wp * page_size, d),
+            pool_ids[pid].reshape(bl, ll * wp * page_size))
+
+
+# ---------------------------------------------------------------------------
+# the store contract
+# ---------------------------------------------------------------------------
+
+class BucketStore:
+    """Shared bookkeeping: counts, spill/evict accounting, the contract
+    every consumer layer (index, search programs, placement, snapshots,
+    benchmarks) goes through. See the module docstring."""
+
+    kind = "abstract"
+
+    def __init__(self, k: int, d: int, dtype, *, max_cap: int | None = None):
+        self.k, self.d = int(k), int(d)
+        self.dtype = jnp.dtype(dtype)
+        # memory budget: posting lists never grow past max_cap slots per
+        # cell — overflow rows spill (counted, not stored) instead of
+        # growing the payload until the device OOMs
+        self.max_cap = None if max_cap is None \
+            else max(8, _round_up(max_cap, 8))
+        self.counts = jnp.zeros((self.k,), jnp.int32)
+        self._counts_np = np.zeros(self.k, np.int64)
+        self.spilled = 0
+        self.evicted = 0
+        self.spill_counts = np.zeros(self.k, np.int64)
+        self.evict_counts = np.zeros(self.k, np.int64)
+
+    # -- shared helpers ------------------------------------------------
+
+    def _account_spill(self, cells: np.ndarray) -> None:
+        self.spill_counts += np.bincount(
+            cells, minlength=self.k).astype(np.int64)
+        self.spilled += int(cells.size)
+
+    def set_counts(self, v) -> None:
+        """Test/repair seam: overwrite the logical list lengths (the
+        dead-cell forging used by reliability tests). Payload unchanged."""
+        self.counts = jnp.asarray(v, jnp.int32)
+        self._counts_np = np.asarray(self.counts).astype(np.int64)
+
+    @property
+    def max_count(self) -> int:
+        return int(self._counts_np.max()) if self.k else 0
+
+    # -- the contract (implemented by both backends) -------------------
+
+    @property
+    def capacity(self) -> int:          # physical slots per cell
+        raise NotImplementedError
+
+    @property
+    def page_param(self) -> int:        # static gather arg (0 = padded)
+        return 0
+
+    @property
+    def n_shards(self) -> int:
+        return 1
+
+    def append(self, cells: np.ndarray, x_sorted: Array,
+               ids: np.ndarray) -> None:
+        """Store a CSR-ordered batch: ``cells`` ascending, ``x_sorted``
+        the matching rows (device), ``ids`` their global int32 ids. The
+        store computes slots, grows/allocates/spills/evicts, and updates
+        ``counts``."""
+        raise NotImplementedError
+
+    def gather_width(self, min_slots: int = 1) -> int:
+        """Per-cell candidate width for the search gather: a power-of-two
+        bucket of the max occupied cell size (>= ``min_slots``, clamped
+        to physical capacity). This is the plan-cache key dimension."""
+        raise NotImplementedError
+
+    def device_arrays(self) -> tuple:
+        raise NotImplementedError
+
+    def shard_specs(self, ka) -> tuple:
+        raise NotImplementedError
+
+    def dense(self) -> tuple[np.ndarray, np.ndarray]:
+        """Host oracle view: ``(x (K, W, d), ids (K, W))`` with padding
+        slots at ``_PAD_COORD``/-1 (tests, filtered-brute references)."""
+        raise NotImplementedError
+
+    def dense_ids(self) -> Array:
+        """Device ``(K, W)`` id view in slot order (posting lists)."""
+        raise NotImplementedError
+
+    def flat(self) -> tuple[Array, Array]:
+        """Device flattened payload for the brute-force oracle."""
+        raise NotImplementedError
+
+    def state_arrays(self) -> dict:
+        raise NotImplementedError
+
+    def meta(self) -> dict:
+        raise NotImplementedError
+
+    def place(self, pctx) -> None:
+        raise NotImplementedError
+
+    def resident_bytes(self) -> int:
+        """Device bytes held by the posting-list payload (+ tables)."""
+        raise NotImplementedError
+
+    def block_until_ready(self) -> None:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# padded backend (the historical layout, extracted)
+# ---------------------------------------------------------------------------
+
+class PaddedBucketStore(BucketStore):
+    """One ``(K, cap, d)`` tensor; amortized-doubling growth; ``max_cap``
+    spill budget. The JIT-friendly equivalent of CSR — a fixed-shape
+    gather target."""
+
+    kind = "padded"
+
+    def __init__(self, k: int, d: int, dtype, *, capacity: int = 8,
+                 max_cap: int | None = None):
+        super().__init__(k, d, dtype, max_cap=max_cap)
+        self.cap = max(8, _round_up(int(capacity), 8))
+        if self.max_cap is not None:
+            self.cap = min(self.cap, self.max_cap)
+        self.buckets = jnp.full((self.k, self.cap, self.d), _PAD_COORD,
+                                self.dtype)
+        self.bucket_ids = jnp.full((self.k, self.cap), -1, jnp.int32)
+
+    @property
+    def capacity(self) -> int:
+        return self.cap
+
+    def append(self, cells, x_sorted, ids):
+        n = int(cells.shape[0])
+        if n == 0:
+            return
+        cells = np.asarray(cells, np.int64)
+        ids = np.asarray(ids, np.int32)
+        rank = np.arange(n) - np.searchsorted(cells, cells)
+        slots = self._counts_np[cells] + rank
+        needed = int(slots.max()) + 1
+        if needed > self.cap:
+            self._grow(needed)
+        if needed > self.cap:   # max_cap reached: spill the overflow
+            keep = slots < self.cap
+            self._account_spill(cells[~keep])
+            kj = np.flatnonzero(keep)
+            cells, slots, ids = cells[kj], slots[kj], ids[kj]
+            x_sorted = jnp.take(x_sorted, jnp.asarray(kj, jnp.int32),
+                                axis=0)
+        if cells.size:
+            cj = jnp.asarray(cells, jnp.int32)
+            sj = jnp.asarray(slots, jnp.int32)
+            self.buckets = self.buckets.at[cj, sj].set(
+                x_sorted.astype(self.dtype))
+            self.bucket_ids = self.bucket_ids.at[cj, sj].set(
+                jnp.asarray(ids))
+            self._counts_np += np.bincount(
+                cells, minlength=self.k).astype(np.int64)
+            self.counts = jnp.asarray(self._counts_np, jnp.int32)
+
+    def _grow(self, needed: int) -> None:
+        """Amortized doubling, clamped to the ``max_cap`` budget."""
+        new_cap = max(_round_up(needed, 8), 2 * self.cap)
+        if self.max_cap is not None:
+            new_cap = min(new_cap, self.max_cap)
+        if new_cap <= self.cap:
+            return
+        pad = new_cap - self.cap
+        self.buckets = jnp.pad(self.buckets, ((0, 0), (0, pad), (0, 0)),
+                               constant_values=_PAD_COORD)
+        self.bucket_ids = jnp.pad(self.bucket_ids, ((0, 0), (0, pad)),
+                                  constant_values=-1)
+        self.cap = new_cap
+
+    def gather_width(self, min_slots: int = 1) -> int:
+        w = _pow2ceil(max(8, self.max_count))
+        w = max(w, _round_up(max(1, min_slots), 8))
+        return min(self.cap, w)
+
+    def device_arrays(self):
+        return (self.buckets, self.bucket_ids)
+
+    def shard_specs(self, ka):
+        return (P(ka, None, None), P(ka, None))
+
+    def dense(self):
+        return np.asarray(self.buckets), np.asarray(self.bucket_ids)
+
+    def dense_ids(self):
+        return self.bucket_ids
+
+    def flat(self):
+        return (self.buckets.reshape(self.k * self.cap, self.d),
+                self.bucket_ids.reshape(self.k * self.cap))
+
+    def state_arrays(self):
+        return {"buckets": np.asarray(self.buckets),
+                "bucket_ids": np.asarray(self.bucket_ids),
+                "counts": np.asarray(self.counts),
+                "spill_counts": self.spill_counts}
+
+    def meta(self):
+        return {"kind": self.kind, "cap": self.cap, "max_cap": self.max_cap,
+                "spilled": int(self.spilled)}
+
+    @classmethod
+    def restore(cls, host, meta, *, k, d, dtype):
+        st = cls(k, d, dtype, capacity=meta["cap"],
+                 max_cap=meta.get("max_cap"))
+        assert st.cap == meta["cap"], "capacity rounding drifted"
+        st.buckets = jnp.asarray(host["buckets"])
+        st.bucket_ids = jnp.asarray(host["bucket_ids"])
+        st.counts = jnp.asarray(host["counts"])
+        st._counts_np = np.asarray(host["counts"]).astype(np.int64)
+        st.spilled = int(meta.get("spilled", host["spill_counts"].sum()))
+        st.spill_counts = np.asarray(host["spill_counts"]).copy()
+        return st
+
+    def place(self, pctx) -> None:
+        ka = pctx.k_axis
+        self.buckets = pctx.put(self.buckets, P(ka, None, None))
+        self.bucket_ids = pctx.put(self.bucket_ids, P(ka, None))
+        self.counts = pctx.put(self.counts, P(ka))
+
+    def resident_bytes(self) -> int:
+        return self.k * self.cap * (self.d * self.dtype.itemsize + 4)
+
+    def block_until_ready(self) -> None:
+        jax.block_until_ready(self.buckets)
+
+    def __repr__(self):
+        return (f"PaddedBucketStore(k={self.k}, d={self.d}, "
+                f"cap={self.cap})")
+
+
+# ---------------------------------------------------------------------------
+# paged backend (block pool + page tables + free-list allocator + LRU)
+# ---------------------------------------------------------------------------
+
+class PagedBucketStore(BucketStore):
+    """Fixed-size pages in one flat pool, per-cell page tables, per-shard
+    free lists, LRU eviction under ``max_bytes``. See module docstring
+    for the layout invariants."""
+
+    kind = "paged"
+
+    def __init__(self, k: int, d: int, dtype, *, capacity: int = 8,
+                 max_cap: int | None = None, page_size: int = 64,
+                 max_bytes: int | None = None, n_shards: int = 1):
+        super().__init__(k, d, dtype, max_cap=max_cap)
+        self.page_size = max(8, _round_up(int(page_size), 8))
+        if k % n_shards:
+            raise ValueError(f"k={k} not divisible by n_shards={n_shards}")
+        self._n_shards = int(n_shards)
+        self.cells_per_shard = self.k // self._n_shards
+        self.max_bytes = max_bytes
+        # table width (pages per cell) sized for the capacity hint; the
+        # pool starts one doubling above the single-hot-cell need
+        self.maxp = max(1, _ceil_div(int(capacity), self.page_size))
+        if self.max_cap is not None:
+            self.maxp = min(self.maxp,
+                            max(1, _ceil_div(self.max_cap, self.page_size)))
+        pps = max(2, _pow2ceil(1 + self.maxp))
+        if self.max_bytes is not None:
+            pps = min(pps, max(2, self._budget_pps()))
+        self.pps = pps                      # pages per shard (incl. pad)
+        self.tables_np = np.zeros((self.k, self.maxp), np.int32)
+        self.tables = jnp.asarray(self.tables_np)
+        self.pages_np = np.zeros(self.k, np.int32)
+        self.last_touch = np.zeros(self.k, np.int64)
+        self._tick = 0
+        # local page 0 of every shard is the reserved padding page
+        self._free = [list(range(1, self.pps))
+                      for _ in range(self._n_shards)]
+        self.pool = jnp.full(
+            (self._n_shards * self.pps, self.page_size, self.d),
+            _PAD_COORD, self.dtype)
+        self.pool_ids = jnp.full(
+            (self._n_shards * self.pps, self.page_size), -1, jnp.int32)
+
+    # -- geometry ------------------------------------------------------
+
+    @property
+    def capacity(self) -> int:
+        return self.maxp * self.page_size
+
+    @property
+    def page_param(self) -> int:
+        return self.page_size
+
+    @property
+    def n_shards(self) -> int:
+        return self._n_shards
+
+    def _page_bytes(self) -> int:
+        return self.page_size * (self.d * self.dtype.itemsize + 4)
+
+    def _budget_pps(self) -> int:
+        return int(self.max_bytes
+                   // (self._n_shards * self._page_bytes()))
+
+    def _owner(self, cells: np.ndarray) -> np.ndarray:
+        return cells // self.cells_per_shard
+
+    # -- allocator -----------------------------------------------------
+
+    def _grow_pool(self, new_pps: int) -> None:
+        s, ps, d = self._n_shards, self.page_size, self.d
+        self.pool = jnp.pad(
+            self.pool.reshape(s, self.pps, ps, d),
+            ((0, 0), (0, new_pps - self.pps), (0, 0), (0, 0)),
+            constant_values=_PAD_COORD).reshape(s * new_pps, ps, d)
+        self.pool_ids = jnp.pad(
+            self.pool_ids.reshape(s, self.pps, ps),
+            ((0, 0), (0, new_pps - self.pps), (0, 0)),
+            constant_values=-1).reshape(s * new_pps, ps)
+        for sh in range(s):
+            self._free[sh].extend(range(self.pps, new_pps))
+        self.pps = new_pps
+
+    def _grow_tables(self, need: int) -> None:
+        new_maxp = _pow2ceil(max(need, self.maxp + 1))
+        if self.max_cap is not None:
+            new_maxp = min(new_maxp,
+                           max(need, _ceil_div(self.max_cap,
+                                               self.page_size)))
+        self.tables_np = np.pad(self.tables_np,
+                                ((0, 0), (0, new_maxp - self.maxp)))
+        self.maxp = new_maxp
+
+    def _evict(self, cell: int) -> None:
+        """Free a cold cell's pages back to the allocator: its rows are
+        dropped (counted, like spills), its pages reset to padding so the
+        flat/brute views never see stale vectors."""
+        npg = int(self.pages_np[cell])
+        pids = self.tables_np[cell, :npg].tolist()
+        sh = cell // self.cells_per_shard
+        gp = jnp.asarray([sh * self.pps + p for p in pids], jnp.int32)
+        self.pool = self.pool.at[gp].set(_PAD_COORD)
+        self.pool_ids = self.pool_ids.at[gp].set(-1)
+        lost = int(self._counts_np[cell])
+        self.evict_counts[cell] += lost
+        self.evicted += lost
+        self._counts_np[cell] = 0
+        self.pages_np[cell] = 0
+        self.tables_np[cell, :] = 0
+        self._free[sh] = sorted(self._free[sh] + pids)
+
+    def _alloc(self, shard: int, protect: set) -> int | None:
+        """One free page on ``shard`` (lowest id — deterministic), via
+        the free list, then pool growth within the byte budget, then LRU
+        eviction of cold unprotected cells. ``None`` = truly full."""
+        free = self._free[shard]
+        if free:
+            return free.pop(0)
+        new_pps = 2 * self.pps
+        if self.max_bytes is not None:
+            new_pps = min(new_pps, self._budget_pps())
+        if new_pps > self.pps:
+            self._grow_pool(new_pps)
+            return self._free[shard].pop(0)
+        lo = shard * self.cells_per_shard
+        hi = lo + self.cells_per_shard
+        while not free:
+            cand = [c for c in range(lo, hi)
+                    if self.pages_np[c] > 0 and c not in protect]
+            if not cand:
+                return None
+            self._evict(min(cand,
+                            key=lambda c: (int(self.last_touch[c]), c)))
+        return free.pop(0)
+
+    # -- the contract --------------------------------------------------
+
+    def append(self, cells, x_sorted, ids):
+        n = int(cells.shape[0])
+        if n == 0:
+            return
+        ps = self.page_size
+        cells = np.asarray(cells, np.int64)
+        ids = np.asarray(ids, np.int32)
+        rank = np.arange(n) - np.searchsorted(cells, cells)
+        slots = self._counts_np[cells] + rank
+        if self.max_cap is not None:     # same budget rule as padded
+            over = slots >= self.max_cap
+            if over.any():
+                self._account_spill(cells[over])
+                kj = np.flatnonzero(~over)
+                cells, slots, ids = cells[kj], slots[kj], ids[kj]
+                x_sorted = jnp.take(x_sorted, jnp.asarray(kj, jnp.int32),
+                                    axis=0)
+        ucells, ustart = np.unique(cells, return_index=True)
+        uend = np.r_[ustart[1:], cells.size] - 1
+        umax = slots[uend] if cells.size else np.zeros(0, np.int64)
+        protect = set(int(c) for c in ucells)
+        drop_from = {}                   # cell -> first unstorable slot
+        for c, smax in zip(ucells, umax):
+            c, need = int(c), int(smax) // ps + 1
+            if need > self.maxp:
+                self._grow_tables(need)
+            for p in range(int(self.pages_np[c]), need):
+                pid = self._alloc(c // self.cells_per_shard, protect)
+                if pid is None:          # budget truly exhausted
+                    drop_from[c] = p * ps
+                    break
+                self.tables_np[c, p] = pid
+                self.pages_np[c] = p + 1
+        if drop_from:
+            thr = np.full(self.k, np.iinfo(np.int64).max)
+            for c, t in drop_from.items():
+                thr[c] = t
+            over = slots >= thr[cells]
+            self._account_spill(cells[over])
+            kj = np.flatnonzero(~over)
+            cells, slots, ids = cells[kj], slots[kj], ids[kj]
+            x_sorted = jnp.take(x_sorted, jnp.asarray(kj, jnp.int32),
+                                axis=0)
+        if cells.size:
+            gpid = (self._owner(cells) * self.pps
+                    + self.tables_np[cells, slots // ps])
+            gj = jnp.asarray(gpid, jnp.int32)
+            sj = jnp.asarray(slots % ps, jnp.int32)
+            self.pool = self.pool.at[gj, sj].set(x_sorted.astype(self.dtype))
+            self.pool_ids = self.pool_ids.at[gj, sj].set(jnp.asarray(ids))
+            self._counts_np += np.bincount(
+                cells, minlength=self.k).astype(np.int64)
+        if ucells.size:                  # write-recency LRU clock
+            self._tick += 1
+            self.last_touch[ucells] = self._tick
+        self.counts = jnp.asarray(self._counts_np, jnp.int32)
+        self.tables = jnp.asarray(self.tables_np)
+
+    def gather_width(self, min_slots: int = 1) -> int:
+        wp = _pow2ceil(max(1, int(self.pages_np.max()) if self.k else 1))
+        wp = max(wp, _ceil_div(max(1, min_slots), self.page_size))
+        return min(wp, self.maxp) * self.page_size
+
+    def device_arrays(self):
+        return (self.pool, self.pool_ids, self.tables)
+
+    def shard_specs(self, ka):
+        return (P(ka, None, None), P(ka, None), P(ka, None))
+
+    def _global_pids_np(self) -> np.ndarray:
+        owner = np.arange(self.k) // self.cells_per_shard
+        return owner[:, None] * self.pps + self.tables_np
+
+    def dense(self):
+        gp = self._global_pids_np().reshape(-1)
+        w = self.maxp * self.page_size
+        x = np.asarray(self.pool)[gp].reshape(self.k, w, self.d)
+        ids = np.asarray(self.pool_ids)[gp].reshape(self.k, w)
+        return x, ids
+
+    def dense_ids(self):
+        gp = jnp.asarray(self._global_pids_np().reshape(-1), jnp.int32)
+        return self.pool_ids[gp].reshape(self.k, self.maxp * self.page_size)
+
+    def flat(self):
+        # pad pages carry _PAD_COORD/-1: safe to scan wholesale
+        return (self.pool.reshape(-1, self.d), self.pool_ids.reshape(-1))
+
+    def state_arrays(self):
+        # canonical packed form: occupied pages in cell-major page order
+        # (physical page ids / free-list fragmentation never serialize)
+        gp = []
+        for c in range(self.k):
+            sh = c // self.cells_per_shard
+            gp.extend(sh * self.pps + int(p)
+                      for p in self.tables_np[c, :int(self.pages_np[c])])
+        gp = np.asarray(gp, np.int64)
+        pool_np = np.asarray(self.pool)
+        ids_np = np.asarray(self.pool_ids)
+        return {"pool_pages": pool_np[gp] if gp.size
+                else pool_np[:0],
+                "pool_page_ids": ids_np[gp] if gp.size else ids_np[:0],
+                "cell_pages": self.pages_np.astype(np.int32),
+                "counts": np.asarray(self.counts),
+                "last_touch": self.last_touch.copy(),
+                "spill_counts": self.spill_counts,
+                "evict_counts": self.evict_counts}
+
+    def meta(self):
+        return {"kind": self.kind, "page_size": self.page_size,
+                "pps": self.pps, "maxp": self.maxp,
+                "n_shards": self._n_shards, "max_cap": self.max_cap,
+                "max_bytes": self.max_bytes, "spilled": int(self.spilled),
+                "evicted": int(self.evicted), "tick": int(self._tick)}
+
+    @classmethod
+    def restore(cls, host, meta, *, k, d, dtype, n_shards=1):
+        ps = int(meta["page_size"])
+        st = cls(k, d, dtype, capacity=ps, page_size=ps,
+                 max_cap=meta.get("max_cap"),
+                 max_bytes=meta.get("max_bytes"), n_shards=n_shards)
+        st.maxp = max(1, int(meta["maxp"]))
+        st.tables_np = np.zeros((k, st.maxp), np.int32)
+        cell_pages = np.asarray(host["cell_pages"], np.int64)
+        cps = st.cells_per_shard
+        shard_used = np.asarray(
+            [cell_pages[s * cps:(s + 1) * cps].sum() + 1
+             for s in range(n_shards)])
+        if n_shards == meta.get("n_shards") and meta.get("pps"):
+            pps = max(int(meta["pps"]), int(shard_used.max()))
+        else:   # different mesh: deterministic canonical sizing
+            pps = max(2, _pow2ceil(int(shard_used.max())))
+        st.pps = pps
+        st._free = [list(range(1, pps)) for _ in range(n_shards)]
+        np_dt = np.dtype(st.dtype.name)
+        pool_np = np.full((n_shards * pps, ps, d), _PAD_COORD, np_dt)
+        ids_np = np.full((n_shards * pps, ps), -1, np.int32)
+        pages, page_ids = host["pool_pages"], host["pool_page_ids"]
+        u = 0
+        for c in range(k):
+            sh = c // cps
+            for p in range(int(cell_pages[c])):
+                pid = st._free[sh].pop(0)
+                st.tables_np[c, p] = pid
+                pool_np[sh * pps + pid] = pages[u]
+                ids_np[sh * pps + pid] = page_ids[u]
+                u += 1
+        st.pool = jnp.asarray(pool_np)
+        st.pool_ids = jnp.asarray(ids_np)
+        st.tables = jnp.asarray(st.tables_np)
+        st.pages_np = cell_pages.astype(np.int32)
+        st.counts = jnp.asarray(host["counts"], jnp.int32)
+        st._counts_np = np.asarray(host["counts"]).astype(np.int64)
+        st.last_touch = np.asarray(host["last_touch"]).copy()
+        st._tick = int(meta.get("tick", st.last_touch.max(initial=0)))
+        st.spilled = int(meta.get("spilled", host["spill_counts"].sum()))
+        st.spill_counts = np.asarray(host["spill_counts"]).copy()
+        st.evicted = int(meta.get("evicted",
+                                  host["evict_counts"].sum()))
+        st.evict_counts = np.asarray(host["evict_counts"]).copy()
+        return st
+
+    def place(self, pctx) -> None:
+        ka = pctx.k_axis
+        self.pool = pctx.put(self.pool, P(ka, None, None))
+        self.pool_ids = pctx.put(self.pool_ids, P(ka, None))
+        self.tables = pctx.put(self.tables, P(ka, None))
+        self.counts = pctx.put(self.counts, P(ka))
+
+    def resident_bytes(self) -> int:
+        return (self._n_shards * self.pps * self._page_bytes()
+                + self.k * self.maxp * 4)
+
+    def occupied_pages(self) -> int:
+        return int(self.pages_np.sum())
+
+    def block_until_ready(self) -> None:
+        jax.block_until_ready(self.pool)
+
+    def __repr__(self):
+        return (f"PagedBucketStore(k={self.k}, d={self.d}, "
+                f"page_size={self.page_size}, pages={self.occupied_pages()}"
+                f"/{self._n_shards * self.pps}, evicted={self.evicted})")

@@ -88,9 +88,12 @@ def _serve_search(args) -> None:
 
     t0 = time.time()
     index = IVFIndex.build(x, k=args.kc, max_iters=args.kmeans_iters,
-                           pctx=pctx)
-    jax.block_until_ready(index.buckets)
+                           pctx=pctx, store=args.store,
+                           page_size=args.page_size)
+    index.block_until_ready()
     t_build = time.time() - t0
+    print(f"bucket store: {index.store!r} "
+          f"({index.resident_bytes() / 1e6:.1f} MB resident)")
 
     scfg = SearchConfig(topk=args.topk, nprobe=args.nprobe,
                         query_batch=args.queries,
@@ -115,6 +118,10 @@ def _serve_search(args) -> None:
           f"nprobe={args.nprobe} topk={args.topk}")
     print(f"build {t_build:.2f}s ({args.n / t_build:.0f} pts/s); "
           f"serve {qps:.0f} qps; recall@{args.topk}={recall:.3f}")
+    print(f"scheduler: {eng.batches_formed} units, "
+          f"{eng.coalesced_requests} coalesced, "
+          f"{eng.interleaved_adds} interleaved adds, "
+          f"queue depth {eng.queue_depth}")
     if pctx is not None:
         cb = index.search_collective_bytes(args.queries, args.topk,
                                            args.nprobe)
@@ -165,6 +172,12 @@ def main() -> None:
     ap.add_argument("--kmeans-iters", type=int, default=8)
     ap.add_argument("--reps", type=int, default=4)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--store", default=None,
+                    choices=["padded", "paged"],
+                    help="posting-list backend (default: "
+                         "REPRO_BUCKET_STORE env, else padded)")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged-store page size in slots (default 64)")
     # reliability (--mode search)
     ap.add_argument("--snapshot-dir", default=None,
                     help="durable index snapshots + write-ahead add-log "

@@ -4,11 +4,17 @@ Same discipline as ``checkpoint.checkpointer`` (whose manifest helpers
 this module reuses): one atomically-written npz per snapshot
 (tmp + rename) plus a JSON manifest recording per-key shape/dtype, the
 covered WAL sequence number, and the scalar index state. Arrays are
-stored **unsharded** — ``np.asarray`` gathers whatever the live mesh
-placement was — so a snapshot taken on one mesh restores onto any
-``ParallelContext`` (or none): placement is re-derived by the
+stored **unsharded and in canonical form** — the posting-list payload is
+serialized by the ``BucketStore`` itself (``state_arrays``): the padded
+backend writes its dense tensors, the paged backend writes *occupied
+pages packed in cell-major order* (physical page ids and free-list
+fragmentation never reach the artifact) — so a snapshot taken on one
+mesh restores onto any ``ParallelContext`` (or none): the store
+re-allocates deterministically and placement is re-derived by the
 constructor's ``_place``, exactly the elastic contract of the training
-checkpoints.
+checkpoints. Logical content (per-cell rows in slot order) round-trips
+exactly, so restored searches — and WAL replay on top of them — are
+bitwise-identical.
 
 The plan cache (``IVFIndex._search_plans``) rides along in the manifest:
 restored geometries dispatch without re-running a chooser. Plan keys are
@@ -29,27 +35,27 @@ import numpy as np
 
 from repro.checkpoint.checkpointer import array_manifest, validate_arrays
 from repro.core.streaming import SufficientStats
+from repro.index import store as _store
 
-SNAPSHOT_VERSION = 1
+SNAPSHOT_VERSION = 2
 _PREFIX, _SUFFIX = "index_", ".npz"
 MANIFEST = "index_manifest.json"
 
 
 def _state_arrays(index) -> dict[str, np.ndarray]:
-    """Gather the full index state to host, unsharded."""
-    return {
+    """Gather the full index state to host, unsharded. The posting-list
+    payload keys come from the store's canonical serialization."""
+    host = {
         "centroids": np.asarray(index.centroids),
-        "buckets": np.asarray(index.buckets),
-        "bucket_ids": np.asarray(index.bucket_ids),
-        "counts": np.asarray(index.counts),
         "stats_sums": np.asarray(index.stats.sums),
         "stats_counts": np.asarray(index.stats.counts),
         "stats_inertia": np.asarray(index.stats.inertia),
         "pending_sums": np.asarray(index._pending.sums),
         "pending_counts": np.asarray(index._pending.counts),
         "pending_inertia": np.asarray(index._pending.inertia),
-        "spill_counts": np.asarray(index.spill_counts),
     }
+    host.update(index.store.state_arrays())
+    return host
 
 
 def _path(directory: str, seqno: int) -> str:
@@ -75,6 +81,7 @@ def save_index(index, directory: str, *, seqno: int = 0,
         "k": index.k, "d": index.d, "cap": index.cap,
         "max_cap": index.max_cap, "n_total": index.n_total,
         "spilled": int(index.spilled),
+        "store": index.store.meta(),
         "search_plans": [[list(key), list(val)]
                          for key, val in index._search_plans.items()],
         "arrays": array_manifest(host),
@@ -106,16 +113,18 @@ def _rebuild(host: dict, meta: dict, *, pctx=None, planner=None,
              interpret=None):
     """Construct a live IVFIndex from host state (disk or in-memory)."""
     from repro.index.ivf import IVFIndex   # lazy: avoid an import cycle
-    index = IVFIndex(jnp.asarray(host["centroids"]), capacity=meta["cap"],
-                     max_cap=meta["max_cap"], interpret=interpret,
-                     planner=planner, pctx=pctx)
-    assert index.cap == meta["cap"], "capacity rounding drifted"
-    index.buckets = jnp.asarray(host["buckets"])
-    index.bucket_ids = jnp.asarray(host["bucket_ids"])
-    index.counts = jnp.asarray(host["counts"])
+    centroids = jnp.asarray(host["centroids"])
+    k, d = centroids.shape
+    n_shards = 1
+    if pctx is not None and pctx.k_axis is not None:
+        n_shards = pctx.n_k_shards
+    store = _store.restore_store(host, meta["store"], k=k, d=d,
+                                 dtype=centroids.dtype, n_shards=n_shards)
+    assert store.kind == meta["store"]["kind"], "store kind drifted"
+    index = IVFIndex(centroids, capacity=store.capacity,
+                     interpret=interpret, planner=planner, pctx=pctx,
+                     store=store)
     index.n_total = int(meta["n_total"])
-    index.spilled = int(meta["spilled"])
-    index.spill_counts = np.asarray(host["spill_counts"]).copy()
     index.stats = SufficientStats(jnp.asarray(host["stats_sums"]),
                                   jnp.asarray(host["stats_counts"]),
                                   jnp.asarray(host["stats_inertia"]))
@@ -144,10 +153,11 @@ def load_index(directory: str, *, seqno: int | None = None, pctx=None,
         validate_arrays(manifest["arrays"], host,
                         context=f"load_index(seqno {seqno})")
         meta = manifest
+        if "store" not in meta:   # pre-paged (version 1) manifest
+            meta = dict(meta, store=_store.infer_store_meta(host, meta))
     else:   # older snapshot than the manifest covers: scalars from shapes
-        meta = {"cap": host["buckets"].shape[1], "max_cap": None,
-                "n_total": int(host["counts"].sum()),
-                "spilled": int(host["spill_counts"].sum()),
+        meta = {"n_total": int(host["counts"].sum()),
+                "store": _store.infer_store_meta(host, {}),
                 "search_plans": []}
     return _rebuild(host, meta, pctx=pctx, planner=planner,
                     interpret=interpret)
@@ -156,8 +166,7 @@ def load_index(directory: str, *, seqno: int | None = None, pctx=None,
 def clone_index(index, *, pctx=None, planner=None):
     """In-memory snapshot round-trip: the last-known-good copy the
     degradation ladder serves from when the live index is unusable."""
-    meta = {"cap": index.cap, "max_cap": index.max_cap,
-            "n_total": index.n_total, "spilled": int(index.spilled),
+    meta = {"n_total": index.n_total, "store": index.store.meta(),
             "search_plans": [[list(k), list(v)]
                              for k, v in index._search_plans.items()]}
     return _rebuild(_state_arrays(index), meta,

@@ -170,9 +170,10 @@ class Engine:
 class SearchConfig:
     topk: int = 10
     nprobe: int = 8
-    query_batch: int = 256    # queries are padded to this (jit-cache shape)
+    query_batch: int = 256    # max formed batch (jit-cache shape ceiling)
     refresh_every: int = 8    # add() batches between automatic refreshes
     refresh_decay: float = 1.0
+    queue_max: int = 4096     # admission-queue bound (backpressure)
     # durability (reliability layer; None/0 = off)
     snapshot_dir: str | None = None   # index snapshots + WAL live here
     snapshot_every: int = 0           # adds between automatic snapshots
@@ -180,22 +181,41 @@ class SearchConfig:
 
 
 class SearchEngine:
-    """Batched query -> top-k serving over a built ``IVFIndex``.
+    """Continuous-batching query -> top-k serving over an ``IVFIndex``.
 
-    Queries are padded to a fixed batch shape so heavy traffic reuses one
-    jitted search executable per index geometry; inserts follow the same
-    incremental contract as the clustered-KV cache — ``add`` assigns and
-    appends, and every ``refresh_every``-th batch triggers a warm-start
-    ``refresh`` (statistics merge + M-step, never a refit). The flush
-    schedule is a host counter, mirroring ``Engine.generate``'s
-    deterministic clustered-mode flushes.
+    The engine is a scheduler over an **admission queue**: ``submit``
+    enqueues a search request (any number of rows), ``submit_add``
+    enqueues an insert, and ``pump`` drains the queue in FIFO order —
+    consecutive search requests are **coalesced** into one execution
+    unit of up to ``query_batch`` rows (a request larger than the
+    remaining unit budget is split; its tail keeps its place at the
+    head of the line), and each unit is padded up to the next
+    KernelPlanner-style power-of-two shape bucket, so ragged traffic of
+    any size reuses a small fixed set of pinned jitted executables —
+    never a fixed-shape rejection, never a per-request replan. Adds are
+    applied between in-flight search units (the classic
+    continuous-batching interleave), so heavy insert traffic never
+    starves queries and vice versa. ``search``/``add`` remain as
+    synchronous wrappers: submit + pump-to-completion.
+
+    Inserts follow the same incremental contract as the clustered-KV
+    cache — ``add`` assigns and appends, and every ``refresh_every``-th
+    batch triggers a warm-start ``refresh`` (statistics merge + M-step,
+    never a refit). The flush schedule is a host counter, mirroring
+    ``Engine.generate``'s deterministic clustered-mode flushes.
+
+    Plans are pinned per shape bucket at config time; the index exposes
+    its search-geometry fingerprint (``search_geometry`` — the store's
+    occupied gather width) and the scheduler re-pins only when that
+    fingerprint moves (store occupancy crossed a width bucket), so
+    steady-state traffic dispatches with zero chooser calls.
 
     The engine is sharding-transparent: over an ``IVFIndex`` built with
     a ``ParallelContext`` (cells + posting lists partitioned over the
     mesh, ``launch.serve --mesh``), the same pinned plan / padded-batch
     contract holds — ``plan_search`` plans at the per-shard shapes and
-    each ``search`` call is one shard_map'd program with O(b·L)
-    cross-shard bytes (``index.search_collective_bytes`` models it).
+    each unit is one shard_map'd program with O(b·L) cross-shard bytes
+    (``index.search_collective_bytes`` models it).
     """
 
     def __init__(self, index, scfg: SearchConfig | None = None, *,
@@ -221,52 +241,186 @@ class SearchEngine:
         self._pending_adds: collections.deque = collections.deque()
         self._lkg = None
         self._mark_healthy()
-        # Pin the kernel plans for the one geometry this engine serves —
-        # the padded (query_batch, d) shape at the index's current
-        # (k, cap) — at config time, so the first query (and every one
-        # after) dispatches without touching a chooser. Capacity growth
-        # from heavy inserts re-keys the index's own plan cache; re-pin
-        # is automatic on the next search.
+        # continuous batching: the admission queue, per-request result
+        # slots, partial accumulators for split requests, and scheduler
+        # counters
+        self._queue: collections.deque = collections.deque()
+        self._results: dict[int, tuple] = {}
+        self._partials: dict[int, tuple[list, list]] = {}
+        self._next_rid = 0
+        self.batches_formed = 0       # search units executed
+        self.coalesced_requests = 0   # requests that shared a unit
+        self.interleaved_adds = 0     # adds applied between units
+        # unit shape buckets: powers of two up to query_batch (the same
+        # snapping rule as KernelPlanner.bucket_dim, floored at 8)
+        qb = self.scfg.query_batch
+        buckets, bsz = [], 8
+        while bsz < qb:
+            buckets.append(bsz)
+            bsz *= 2
+        buckets.append(qb)
+        self._buckets = buckets
+        # Pin the kernel plans for every shape bucket this engine can
+        # form at config time, so the first query (and every one after)
+        # dispatches without touching a chooser. Store-occupancy growth
+        # from heavy inserts moves the index's geometry fingerprint;
+        # the scheduler re-pins exactly then (next search unit).
+        self._pinned_geom = None
         self.pinned_plan = None
         if hasattr(index, "plan_search"):
-            self.pinned_plan = index.plan_search(
-                self.scfg.query_batch, self.scfg.topk, self.scfg.nprobe)
+            self._pin_plans()
 
     # ------------------------------------------------------------------
-    # queries
+    # continuous batching: admission + batch formation + interleave
     # ------------------------------------------------------------------
 
-    def search(self, q: Array) -> tuple[Array, Array]:
-        """q: (B, d) -> (ids (B, topk), dists) for any B.
+    @property
+    def queue_depth(self) -> int:
+        return len(self._queue)
 
-        Batches larger than ``query_batch`` are split into padded
-        sub-batches (each reusing the one pinned executable) and the
-        results concatenated — arbitrary B, still zero replans. With a
-        ``HealthPolicy`` attached this never raises and never returns
-        non-finite distances: queries are sanitized on the way in and
-        every sub-batch walks the degradation ladder (see
-        ``reliability.health``)."""
+    def _pin_plans(self) -> None:
+        for bsz in self._buckets:
+            plan = self.index.plan_search(bsz, self.scfg.topk,
+                                          self.scfg.nprobe)
+        self.pinned_plan = plan
+        if hasattr(self.index, "search_geometry"):
+            self._pinned_geom = self.index.search_geometry(
+                self.scfg.topk, self.scfg.nprobe)
+
+    def _admit(self, kind: str, payload) -> int:
+        if len(self._queue) >= self.scfg.queue_max:
+            raise RuntimeError(
+                f"admission queue full ({self.scfg.queue_max} requests): "
+                f"backpressure — pump() or raise queue_max")
+        self._next_rid += 1
+        self._queue.append((kind, self._next_rid, payload))
+        return self._next_rid
+
+    def submit(self, q: Array) -> int:
+        """Enqueue a search request (any row count, including 0);
+        returns a request id for ``take``. Sanitization happens at
+        admission so the queue only holds servable rows."""
         q = jnp.asarray(q)
-        b = q.shape[0]
         if self.health is not None:
             qh, rep = guard_batch(np.asarray(q), self.index.d,
                                   policy=self.health.query_policy,
                                   name="query batch")
             self.counters.queries_sanitized += rep.bad_rows
             q = jnp.asarray(qh, q.dtype)
+        return self._admit("search", q)
+
+    def submit_add(self, x) -> int:
+        """Enqueue an insert; it is applied in FIFO position between
+        search units (continuous-batching interleave). Returns a request
+        id whose ``take`` yields the assigned cells."""
+        return self._admit("add", x)
+
+    def take(self, rid: int):
+        """Block (pump) until request ``rid`` completes; return its
+        result — ``(ids, dists)`` for a search, assigned cells for an
+        add."""
+        while rid not in self._results:
+            if not self.pump(1):
+                raise KeyError(f"unknown or lost request id {rid}")
+        return self._results.pop(rid)
+
+    def pump(self, max_units: int | None = None) -> int:
+        """Drain the admission queue: each unit is either one coalesced
+        padded search batch or one interleaved add. Returns the number
+        of units executed (0 = queue empty)."""
+        done = 0
+        while self._queue and (max_units is None or done < max_units):
+            if self._queue[0][0] == "add":
+                _, rid, x = self._queue.popleft()
+                self._results[rid] = self.add(x)
+                self.interleaved_adds += 1
+            else:
+                self._run_search_unit()
+            done += 1
+        return done
+
+    def _run_search_unit(self) -> None:
+        """Form and execute one search unit: coalesce consecutive queued
+        search requests up to ``query_batch`` rows (splitting an
+        oversized request — its tail stays at the head of the line),
+        snap the unit to its power-of-two shape bucket, run it through
+        the health ladder, and scatter results back per request."""
         qb = self.scfg.query_batch
-        out_ids, out_d = [], []
-        for lo in range(0, max(b, 1), qb):
-            qc = q[lo:lo + qb]
-            bc = qc.shape[0]
-            if bc < qb:
-                qc = jnp.pad(qc, ((0, qb - bc), (0, 0)))
-            ids, dists = self._search_padded(qc)
-            out_ids.append(ids[:bc])
-            out_d.append(dists[:bc])
-        self.queries_served += b
-        return (jnp.concatenate(out_ids, axis=0),
-                jnp.concatenate(out_d, axis=0))
+        parts: list[tuple[int, Array, bool]] = []   # (rid, rows, has_tail)
+        rows = 0
+        while self._queue and self._queue[0][0] == "search" and rows < qb:
+            kind, rid, q = self._queue.popleft()
+            n = q.shape[0]
+            if n == 0:   # zero-row request: immediate honest empty result
+                self._settle(rid, jnp.zeros((0, self.scfg.topk), jnp.int32),
+                             jnp.zeros((0, self.scfg.topk), jnp.float32),
+                             has_tail=False)
+                continue
+            tk = min(n, qb - rows)
+            if n > tk:   # split: the tail keeps its place in line
+                self._queue.appendleft((kind, rid, q[tk:]))
+            parts.append((rid, q[:tk], n > tk))
+            rows += tk
+            if n > tk:
+                break
+        if not parts:
+            return
+        if len(parts) > 1:
+            self.coalesced_requests += len(parts)
+        unit = parts[0][1] if len(parts) == 1 else \
+            jnp.concatenate([p[1] for p in parts], axis=0)
+        bucket = next(bb for bb in self._buckets if bb >= rows)
+        if rows < bucket:
+            unit = jnp.pad(unit, ((0, bucket - rows), (0, 0)))
+        # re-pin only when the index's geometry fingerprint moved (store
+        # occupancy crossed a gather-width bucket)
+        if self._pinned_geom is not None:
+            geom = self.index.search_geometry(self.scfg.topk,
+                                              self.scfg.nprobe)
+            if geom != self._pinned_geom:
+                self._pin_plans()
+        ids, dists = self._search_padded(unit)
+        self.batches_formed += 1
+        self.queries_served += rows
+        lo = 0
+        for rid, qpart, has_tail in parts:
+            n = qpart.shape[0]
+            self._settle(rid, ids[lo:lo + n], dists[lo:lo + n],
+                         has_tail=has_tail)
+            lo += n
+
+    def _settle(self, rid: int, ids: Array, dists: Array, *,
+                has_tail: bool) -> None:
+        """Accumulate one request's slice; finish it once no tail
+        remains queued."""
+        si, sd = self._partials.get(rid, ([], []))
+        si.append(ids)
+        sd.append(dists)
+        if has_tail:
+            self._partials[rid] = (si, sd)
+            return
+        self._partials.pop(rid, None)
+        if len(si) == 1:
+            self._results[rid] = (si[0], sd[0])
+        else:
+            self._results[rid] = (jnp.concatenate(si, axis=0),
+                                  jnp.concatenate(sd, axis=0))
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+
+    def search(self, q: Array) -> tuple[Array, Array]:
+        """q: (B, d) -> (ids (B, topk), dists) for any B — the
+        synchronous wrapper over the continuous-batching queue: admit,
+        pump to completion, return. Batches larger than ``query_batch``
+        run as multiple coalesced units; smaller ones snap to a pinned
+        power-of-two bucket — arbitrary B, zero replans. With a
+        ``HealthPolicy`` attached this never raises and never returns
+        non-finite distances: queries are sanitized at admission and
+        every unit walks the degradation ladder (see
+        ``reliability.health``)."""
+        return self.take(self.submit(q))
 
     def _search_padded(self, q: Array) -> tuple[Array, Array]:
         if self.health is None:

@@ -192,6 +192,45 @@ def test_inprocess_sharded_search_ids_identical():
             f"nprobe={nprobe}"
 
 
+def test_inprocess_paged_store_sharded_ids_identical():
+    """Paged bucket store on a (2 data x 4 cells) mesh: the page pool and
+    page tables are sharded over the cells axis, yet search results stay
+    id-identical to the single-device *padded* index — before and after
+    an online add/refresh cycle."""
+    _require_devices(8)
+    import jax
+    import numpy as np
+    from repro.core.parallel import ParallelContext, build_mesh
+    from repro.index import IVFIndex
+    key = jax.random.PRNGKey(3)
+    kc, ka, kn, kq = jax.random.split(key, 4)
+    k, d, n = 16, 8, 1024
+    centers = jax.random.normal(kc, (k, d)) * 5.0
+    x = centers[jax.random.randint(ka, (n,), 0, k)] \
+        + 0.3 * jax.random.normal(kn, (n, d))
+    q = x[jax.random.randint(kq, (64,), 0, n)]
+    pctx = ParallelContext.for_mesh(build_mesh((2, 4), ("data", "model")))
+    ref = IVFIndex(centers, capacity=128)
+    sh = IVFIndex(centers, capacity=128, pctx=pctx, store="paged")
+    assert sh.store.kind == "paged" and sh.store.n_shards == 4
+    ref.add(x)
+    sh.add(x)
+    for nprobe in (4, k):
+        ids_ref, _ = ref.search(q, topk=10, nprobe=nprobe)
+        ids_sh, _ = sh.search(q, topk=10, nprobe=nprobe)
+        assert np.array_equal(np.asarray(ids_sh), np.asarray(ids_ref)), \
+            f"nprobe={nprobe}"
+    x2 = centers[jax.random.randint(kq, (257,), 0, k)] \
+        + 0.3 * jax.random.normal(kn, (257, d))
+    ref.add(x2)
+    sh.add(x2)
+    ref.refresh()
+    sh.refresh()
+    ids_ref, _ = ref.search(q, topk=10, nprobe=k)
+    ids_sh, _ = sh.search(q, topk=10, nprobe=k)
+    assert np.array_equal(np.asarray(ids_sh), np.asarray(ids_ref))
+
+
 def test_inprocess_dead_k_shard_is_robust():
     _require_devices(8)
     import jax

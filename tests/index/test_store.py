@@ -1,0 +1,274 @@
+"""BucketStore layer acceptance tests.
+
+One parameterized fixture runs the FlashIVF search/add/refresh/spill
+contract on *both* backends and requires id-identical results against
+the padded reference (the historical layout). Paged-only invariants —
+the free-list allocator, LRU eviction under a byte budget, canonical
+snapshots that erase physical fragmentation, resident bytes tracking
+*occupied* pages under Zipf cell skew — get their own cases. The module
+also carries the architecture guard: no module outside
+``index/store.py`` touches a raw bucket tensor (grep-enforced, like the
+shard_map rule in ``core/parallel.py``).
+"""
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.index import IVFIndex, make_store
+from repro.index.store import (PagedBucketStore, default_store_kind,
+                               restore_store)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))))
+SRC = os.path.join(ROOT, "src", "repro")
+
+
+def _blobs(key, n, k, d, spread=6.0, noise=0.3):
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.normal(kc, (k, d)) * spread
+    assign = jax.random.randint(ka, (n,), 0, k)
+    x = centers[assign] + jax.random.normal(kn, (n, d)) * noise
+    return x, centers
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    x, centers = _blobs(jax.random.PRNGKey(11), 2000, 16, 16)
+    return x, centers
+
+
+@pytest.fixture(params=["padded", "paged"])
+def kind(request):
+    return request.param
+
+
+def _pair(centers, kind, **kw):
+    """A (reference, subject) index pair over identical centroids: the
+    reference is always the padded layout."""
+    ref = IVFIndex(jnp.asarray(centers), capacity=kw.get("capacity", 128),
+                   max_cap=kw.get("max_cap"), store="padded")
+    sub = IVFIndex(jnp.asarray(centers), capacity=kw.get("capacity", 128),
+                   max_cap=kw.get("max_cap"), store=kind,
+                   page_size=kw.get("page_size"),
+                   store_bytes=kw.get("store_bytes"))
+    return ref, sub
+
+
+# --- the shared contract: id-identical on every backend --------------------
+
+def test_search_ids_identical_to_padded(corpus, kind):
+    x, centers = corpus
+    ref, sub = _pair(centers, kind)
+    ref.add(x)
+    sub.add(x)
+    q = x[:64]
+    for nprobe in (4, 16):
+        ids_r, d_r = ref.search(q, topk=10, nprobe=nprobe)
+        ids_s, d_s = sub.search(q, topk=10, nprobe=nprobe)
+        assert np.array_equal(np.asarray(ids_s), np.asarray(ids_r)), \
+            f"nprobe={nprobe}"
+        np.testing.assert_array_equal(np.asarray(d_s), np.asarray(d_r))
+
+
+def test_add_refresh_ids_identical_to_padded(corpus, kind):
+    x, centers = corpus
+    ref, sub = _pair(centers, kind)
+    for lo in (0, 700, 1400):            # growth across appends
+        ref.add(x[lo:lo + 700])
+        sub.add(x[lo:lo + 700])
+    ref.refresh()
+    sub.refresh()
+    np.testing.assert_array_equal(np.asarray(ref.centroids),
+                                  np.asarray(sub.centroids))
+    q = x[100:164]
+    ids_r, _ = ref.search(q, topk=10, nprobe=16)
+    ids_s, _ = sub.search(q, topk=10, nprobe=16)
+    assert np.array_equal(np.asarray(ids_s), np.asarray(ids_r))
+    # posting lists partition the corpus identically
+    ids_pr, off_r = ref.posting_lists()
+    ids_ps, off_s = sub.posting_lists()
+    np.testing.assert_array_equal(np.asarray(off_s), np.asarray(off_r))
+    np.testing.assert_array_equal(np.asarray(ids_ps), np.asarray(ids_pr))
+
+
+def test_spill_budget_parity(corpus, kind):
+    """max_cap overflow spills count identically on both layouts: rows
+    beyond the budget are dropped (never stored), ids stay monotone."""
+    x, centers = corpus
+    ref, sub = _pair(centers, kind, capacity=32, max_cap=64)
+    for lo in range(0, 2000, 250):
+        ref.add(x[lo:lo + 250])
+        sub.add(x[lo:lo + 250])
+    assert sub.spilled == ref.spilled > 0
+    np.testing.assert_array_equal(sub.spill_counts, ref.spill_counts)
+    np.testing.assert_array_equal(np.asarray(sub.counts),
+                                  np.asarray(ref.counts))
+    q = x[:32]
+    ids_r, _ = ref.search(q, topk=5, nprobe=4)
+    ids_s, d_s = sub.search(q, topk=5, nprobe=4)
+    assert np.array_equal(np.asarray(ids_s), np.asarray(ids_r))
+    assert bool(jnp.all(jnp.isfinite(d_s)))
+
+
+def test_snapshot_roundtrip_bitwise(corpus, kind, tmp_path):
+    x, centers = corpus
+    _, sub = _pair(centers, kind)
+    sub.add(x)
+    q = x[:32]
+    ids0, d0 = sub.search(q, topk=5, nprobe=4)
+    sub.save(str(tmp_path), seqno=3)
+    back = IVFIndex.load(str(tmp_path))
+    assert back.store.kind == kind
+    ids1, d1 = back.search(q, topk=5, nprobe=4)
+    np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids0))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d0))
+    bx, bi = sub.store.dense()
+    cx, ci = back.store.dense()
+    np.testing.assert_array_equal(ci, bi)
+    np.testing.assert_array_equal(cx, bx)
+
+
+def test_default_store_kind_env(monkeypatch):
+    monkeypatch.delenv("REPRO_BUCKET_STORE", raising=False)
+    assert default_store_kind() == "padded"
+    monkeypatch.setenv("REPRO_BUCKET_STORE", "paged")
+    assert default_store_kind() == "paged"
+    idx = IVFIndex(jnp.zeros((4, 8)), capacity=16)
+    assert idx.store.kind == "paged"
+    monkeypatch.setenv("REPRO_BUCKET_STORE", "mmap")
+    with pytest.raises(ValueError, match="REPRO_BUCKET_STORE"):
+        default_store_kind()
+
+
+# --- paged-only invariants -------------------------------------------------
+
+def test_paged_resident_bytes_track_occupied_pages(corpus):
+    """Zipf-skewed cells: one hot cell forces the padded layout to pay
+    ``K * max_cell`` while the paged pool pays ~occupied pages."""
+    x, centers = corpus
+    ref, sub = _pair(centers, "paged", capacity=8, page_size=32)
+    hot = jnp.tile(x[:1], (1500, 1)) + 0.01 * jax.random.normal(
+        jax.random.PRNGKey(4), (1500, 16))
+    for idx in (ref, sub):
+        idx.add(x[:500])
+        idx.add(hot)                     # one cell takes ~1500 rows
+    q = x[:32]
+    ids_r, _ = ref.search(q, topk=10, nprobe=16)
+    ids_s, _ = sub.search(q, topk=10, nprobe=16)
+    assert np.array_equal(np.asarray(ids_s), np.asarray(ids_r))
+    st = sub.store
+    # pool sized by pages in use, not K * hottest-cell capacity
+    assert st.occupied_pages() * st.page_size < 2 * sub.n_total
+    assert sub.resident_bytes() < ref.resident_bytes() / 2
+    # and the gather width is capped at mapped pages, not physical maxp
+    assert sub._gather_width(10, 16) <= st.gather_width(1)
+
+
+def test_paged_lru_eviction_under_byte_budget():
+    """A byte budget forces the allocator through the LRU evictor: the
+    coldest cells' pages are freed (rows counted, like spills), hot cells
+    keep serving, and search results stay finite and honest."""
+    d, ps = 8, 8
+    centers = jnp.asarray(np.eye(4, d, dtype=np.float32) * 40.0)
+    budget = 8 * ps * (d * 4 + 4)        # 8 pages: fits 2 of the 4 cells
+    idx = IVFIndex(centers, capacity=16, store="paged", page_size=ps,
+                   store_bytes=budget)
+    key = jax.random.PRNGKey(0)
+    # touch cells 0..3 in order; each batch fills ~6 pages
+    for c in range(4):
+        pts = centers[c] + 0.1 * jax.random.normal(
+            jax.random.fold_in(key, c), (3 * ps, d))
+        idx.add(pts)
+    st = idx.store
+    assert isinstance(st, PagedBucketStore)
+    assert st.resident_bytes() <= budget + st.k * st.maxp * 4
+    assert idx.evicted > 0
+    # the last-written (hottest) cell survived intact
+    assert int(idx.evict_counts[3]) == 0
+    assert int(np.asarray(idx.counts)[3]) == 3 * ps
+    # the evicted cell's rows are gone from every view: honest -1s
+    ids, dists = idx.search(centers + 0.05, topk=4, nprobe=4)
+    valid = np.asarray(ids) >= 0
+    assert bool(np.all(np.isfinite(np.asarray(dists)[valid])))
+    assert idx.n_total - idx.evicted - idx.spilled \
+        == int(np.asarray(idx.counts).sum())
+
+
+def test_paged_snapshot_is_canonical_after_fragmentation(tmp_path):
+    """Evicting a cell fragments the free list; the snapshot must not
+    care: state_arrays packs occupied pages cell-major, restore
+    re-allocates deterministically, and the restored index serves
+    identical results from a compact pool."""
+    d, ps = 8, 8
+    centers = jnp.asarray(np.eye(4, d, dtype=np.float32) * 40.0)
+    budget = 8 * ps * (d * 4 + 4)
+    idx = IVFIndex(centers, capacity=16, store="paged", page_size=ps,
+                   store_bytes=budget)
+    key = jax.random.PRNGKey(1)
+    for c in range(4):                   # forces eviction of cell 0
+        idx.add(centers[c] + 0.1 * jax.random.normal(
+            jax.random.fold_in(key, c), (3 * ps, d)))
+    assert idx.evicted > 0
+    q = centers + 0.05
+    ids0, d0 = idx.search(q, topk=4, nprobe=4)
+    idx.save(str(tmp_path), seqno=1)
+    back = IVFIndex.load(str(tmp_path))
+    assert back.store.kind == "paged"
+    assert back.evicted == idx.evicted
+    ids1, d1 = back.search(q, topk=4, nprobe=4)
+    np.testing.assert_array_equal(np.asarray(ids1), np.asarray(ids0))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d0))
+    # canonical artifact: no free-list state, only occupied pages
+    host = back.store.state_arrays()
+    assert host["pool_pages"].shape[0] == back.store.occupied_pages()
+
+
+def test_paged_restore_across_shard_counts(corpus):
+    """The same canonical snapshot restores onto a different shard count
+    with identical logical content (the elastic contract)."""
+    x, _ = corpus
+    st = make_store("paged", 16, 16, jnp.float32, capacity=64,
+                    page_size=16, n_shards=4)
+    cells = np.sort(np.asarray(
+        jax.random.randint(jax.random.PRNGKey(2), (512,), 0, 16)))
+    rows = jax.random.normal(jax.random.PRNGKey(3), (512, 16))
+    st.append(cells, rows, np.arange(512, dtype=np.int32))
+    host = {k: np.asarray(v) for k, v in st.state_arrays().items()}
+    back = restore_store(host, st.meta(), k=16, d=16, dtype=jnp.float32,
+                         n_shards=1)
+    bx, bi = st.dense()
+    cx, ci = back.dense()
+    w = min(bx.shape[1], cx.shape[1])
+    np.testing.assert_array_equal(ci[:, :w], bi[:, :w])
+    np.testing.assert_array_equal(cx[:, :w], bx[:, :w])
+    assert bi[:, w:].max(initial=-1) == -1
+    assert ci[:, w:].max(initial=-1) == -1
+
+
+# --- architecture guard ----------------------------------------------------
+
+def test_zero_raw_bucket_tensor_sites_outside_store():
+    """The acceptance invariant of the BucketStore refactor: outside
+    ``index/store.py`` no module reads or writes a raw posting-list
+    tensor attribute — every access goes through the store contract."""
+    raw = re.compile(r"\.(buckets|bucket_ids|pool|pool_ids|tables"
+                     r"|tables_np|pages_np|last_touch|_free)\b")
+    offenders = []
+    for dirpath, _, files in os.walk(SRC):
+        for f in files:
+            if not f.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, f)
+            rel = os.path.relpath(path, SRC)
+            if rel == os.path.join("index", "store.py"):
+                continue
+            with open(path, encoding="utf-8") as fh:
+                for lineno, line in enumerate(fh, 1):
+                    code = line.split("#", 1)[0]
+                    if raw.search(code):
+                        offenders.append(f"{rel}:{lineno}: {line.strip()}")
+    assert not offenders, "\n".join(offenders)
