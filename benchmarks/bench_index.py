@@ -74,6 +74,34 @@ def rows() -> list[str]:
             f"recall_at_{topk}={recall_at_k(ids, ids_ref):.3f};"
             f"modeled_tpu_us={(t_probe + t_scan) * 1e6:.1f}"))
 
+    # --- quantized payloads: two-phase q8 search vs fp32 ------------------
+    # wall QPS at matched recall, plus the planner's modeled scan-HBM
+    # bytes per batch: the fp32 grouped scan streams cand*d*4 payload
+    # bytes per query while q8 streams cand*(d*1 + 4) (int8 codes + f32
+    # scale sidecar) and then rescores only R = rescore_mult*topk
+    # candidate rows in exact fp32
+    iq8 = IVFIndex.build(x, k=k, max_iters=8, codec="q8")
+    iq8.block_until_ready()
+    for nprobe in (2, 8, k):
+        us = C.wall_us(
+            lambda qq, np_=nprobe: iq8.search(qq, topk=topk, nprobe=np_),
+            q, reps=3, warmup=1)
+        ids, _ = iq8.search(q, topk=topk, nprobe=nprobe)
+        cand = nprobe * iq8.cap
+        r = min(max(topk, iq8.rescore_mult * topk), cand)
+        b_f32 = index.planner.plan(
+            "scan", (nq, nprobe * index.cap, d, topk)).hbm_bytes
+        b_q8 = (iq8.planner.plan("scan_q8", (nq, cand, d, r),
+                                 jnp.int8).hbm_bytes
+                + iq8.planner.plan("scan",
+                                   (nq, r, d, min(topk, r))).hbm_bytes)
+        out.append(C.fmt_row(
+            f"ivf_search_q8_nprobe{nprobe}_B{nq}", us,
+            f"recall_at_{topk}={recall_at_k(ids, ids_ref):.3f};"
+            f"modeled_scan_bytes_fp32={b_f32:.0f};"
+            f"modeled_scan_bytes_q8={b_q8:.0f};"
+            f"scan_bytes_reduction={b_f32 / b_q8:.2f}x"))
+
     # --- sharded search: QPS + modeled collective bytes vs nprobe ---------
     from repro.core.parallel import (ParallelContext, make_host_mesh,
                                      search_collective_bytes_model)
@@ -162,6 +190,25 @@ def rows() -> list[str]:
         f"page_size={st.page_size};"
         f"bytes_vs_padded={pg_iz.resident_bytes() / pad_iz.resident_bytes():.3f};"
         f"ids_identical={int(np.array_equal(np.asarray(ids_g), np.asarray(ids_p)))}"))
+
+    # paged + q8: the two memory axes compose — page pool of int8 codes
+    # (+ f32 scale sidecar) under the same Zipf skew; payload_bytes is
+    # the apples-to-apples codes+ids(+scales) comparison against the
+    # paged fp32 pool
+    t0 = time.perf_counter()
+    iq = IVFIndex(centers, capacity=64, store="paged", codec="q8")
+    for lo in range(0, n, 4096):
+        iq.add(xz[lo:lo + 4096])
+    iq.block_until_ready()
+    q8_us = (time.perf_counter() - t0) * 1e6
+    ids_q, _ = iq.search(q, topk=topk, nprobe=8)
+    out.append(C.fmt_row(
+        f"ivf_memory_zipf_N{n}_K{k}_d{d}", q8_us,
+        f"store=paged+q8;resident_bytes={iq.resident_bytes()};"
+        f"payload_bytes={iq.store.payload_bytes()};"
+        f"payload_vs_paged_fp32="
+        f"{iq.store.payload_bytes() / pg_iz.resident_bytes():.3f};"
+        f"recall_vs_padded_fp32={recall_at_k(ids_q, ids_p):.3f}"))
     return out
 
 

@@ -196,6 +196,52 @@ def scan_footprint(bb: int, bc: int, l: int, d: int, bytes_in: int) -> int:
     return q_tile + c_tiles + score + merged + state + out
 
 
+def scan_q8_footprint(bb: int, bw: int, l: int, d: int) -> int:
+    """VMEM bytes held live by one quantized grouped-scan grid step.
+
+    The streamed candidate tile is int8 codes (``2·B_B·B_W·d·1``) plus a
+    per-slot f32 scale strip; the kernel dequantizes in-register, so the
+    f32 residual intermediate (``B_B·B_W·d·4``) — not the code stream —
+    is the dominant VMEM term. That is the codec trade stated plainly:
+    HBM traffic shrinks ~4x while the on-chip working set stays f32-sized.
+    """
+    q_tile = bb * d * 4                 # resident q' tile (f32)
+    c_tiles = 2 * bb * bw * d * 1       # double-buffered int8 code stream
+    s_tiles = 2 * bb * bw * 4           # double-buffered f32 scale strip
+    deq = bb * bw * d * 4               # f32 dequantized residual
+    score = bb * bw * 4 * 2             # f32 score + rsq intermediates
+    merged = bb * (l + bw) * (4 + 4)    # merged (vals, idxs) pool
+    state = bb * l * (4 + 4)
+    out = bb * l * (4 + 4)
+    return q_tile + c_tiles + s_tiles + deq + score + merged + state + out
+
+
+def choose_scan_q8_blocks(b: int, c: int, d: int, l: int, *,
+                          hw: Hardware = TPU_V5E) -> tuple[int, int]:
+    """Closed-form (block_b, block_w) for the quantized grouped scan —
+    the same largest-feasible-area objective as ``choose_scan_blocks``,
+    judged against the q8 footprint. The int8 code tile is cheap but the
+    f32 dequant intermediate restores most of the pressure, so the
+    feasible region is only modestly larger than the fp32 scan's."""
+    budget = vmem_budget(hw)
+    l_pad = _round_up(max(1, l), hw.sublane)
+    b_lim = _round_up(b, hw.sublane)
+    c_lim = _round_up(c, hw.lane)
+    best = (hw.sublane, hw.lane)
+    bb_cands = tuple(hw.sublane * 2**i for i in range(4)) + _CANDIDATE_TILES
+    for bb in bb_cands:
+        if bb > b_lim:
+            continue
+        for bw in _CANDIDATE_TILES:
+            if bw > c_lim and bw > hw.lane:
+                continue
+            if scan_q8_footprint(bb, bw, l_pad, d) > budget:
+                continue
+            if (bb * bw, bw) > (best[0] * best[1], best[1]):
+                best = (bb, bw)
+    return best
+
+
 def choose_scan_blocks(b: int, c: int, d: int, l: int, *,
                        dtype_bytes: int = 4, hw: Hardware = TPU_V5E
                        ) -> tuple[int, int]:

@@ -47,14 +47,15 @@ from repro.kernels.ops import BlockConfig
 # fatal) rather than deserialized into wrong plans.
 CACHE_VERSION = 1
 
-OPS = ("assign", "update", "step", "probe", "scan")
+OPS = ("assign", "update", "step", "probe", "scan", "scan_q8")
 
-_SHAPE_ARITY = {"assign": 3, "update": 3, "step": 3, "probe": 4, "scan": 4}
+_SHAPE_ARITY = {"assign": 3, "update": 3, "step": 3, "probe": 4, "scan": 4,
+                "scan_q8": 4}
 
 # which shape positions are batch-like (bucketed to the next power of
 # two); geometry dims (k, d, l) stay exact — they pin the VMEM footprint
 _BUCKET_DIMS = {"assign": (0,), "update": (0,), "step": (0,),
-                "probe": (0,), "scan": (0, 1)}
+                "probe": (0,), "scan": (0, 1), "scan_q8": (0, 1)}
 
 _ITEMSIZE_DTYPE = {2: jnp.bfloat16, 4: jnp.float32, 8: jnp.float64}
 
@@ -371,6 +372,19 @@ class KernelPlanner:
             return mk(impl="online_topl", blocks=(bn, bk), block=None,
                       vmem_bytes=H.probe_footprint(bn, bk, l_pad, d, b),
                       hbm_bytes=H.probe_bytes_flash(n, k, d, l, b))
+        if op == "scan_q8":
+            bq, c, d, l = s
+            bb, bw = H.choose_scan_q8_blocks(bq, c, d, l, hw=hw)
+            l_pad = _round_up(max(1, l), hw.sublane)
+            # codec-aware scan traffic: the shifted query block (f32,
+            # one row per probe slot — amortized into the bq*d term),
+            # int8 codes + one f32 scale per candidate row, the (B, L)
+            # index/dist pair out
+            hbm = (bq * d * 4.0 + bq * c * (d * 1 + 4)
+                   + 2 * bq * l * 4)
+            return mk(impl="grouped_scan_q8", blocks=(bb, bw), block=None,
+                      vmem_bytes=H.scan_q8_footprint(bb, bw, l_pad, d),
+                      hbm_bytes=hbm)
         bq, c, d, l = s
         bb, bc = H.choose_scan_blocks(bq, c, d, l, dtype_bytes=b, hw=hw)
         l_pad = _round_up(max(1, l), hw.sublane)

@@ -1,0 +1,42 @@
+"""One symmetric-int8 convention for the whole repo.
+
+Every int8 path — the error-feedback compressed all-reduce in
+``optim/compression.py`` and the quantized bucket payloads in
+``index/quant.py`` — rounds and scales the same way:
+
+    scale = max(absmax / 127, SCALE_EPS)        # per block / row / cell
+    q     = clip(round(x / scale), -127, 127)   # int8, symmetric
+    x'    = float32(q) * scale
+
+Symmetric (no zero point) keeps dequant a single fused multiply on the
+VPU, the 127 (not 128) bound keeps the grid symmetric so round-trip
+error is unbiased, and the epsilon guard makes all-zero blocks encode
+to exact zeros instead of NaNs. Keeping the convention in one module
+means a kernel that dequantizes in VMEM and a host-side decode always
+agree bitwise.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Guards scale against all-zero blocks; small enough that any real
+# payload's absmax/127 dominates it.
+SCALE_EPS = 1e-12
+
+
+def symmetric_scale(absmax: Array) -> Array:
+    """Per-block scale from a per-block absmax (any shape)."""
+    return jnp.maximum(absmax.astype(jnp.float32) / 127.0, SCALE_EPS)
+
+
+def quantize_symmetric(x: Array, scale: Array) -> Array:
+    """Quantize ``x`` with a broadcastable ``scale`` -> int8 codes."""
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+
+
+def dequantize_symmetric(q: Array, scale: Array) -> Array:
+    """Decode int8 codes with a broadcastable ``scale`` -> float32."""
+    return q.astype(jnp.float32) * scale

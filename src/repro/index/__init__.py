@@ -12,11 +12,25 @@ Public API:
   ``PagedBucketStore`` (PagedAttention-style page pool + per-cell page
   tables + free-list allocator + LRU evictor). Selected per index via
   ``IVFIndex(..., store=...)`` or the ``REPRO_BUCKET_STORE`` env.
+
+  Codec — the payload-codec axis (``index/quant.py``), orthogonal to
+  the backend axis: ``Int8ResidualCodec`` stores per-slot symmetric
+  int8 residual codes (~4x smaller payloads), searched in two phases
+  (quantized top-R proposal + exact fp32 rescore). A
+  ``QuantizedBucketStore`` wraps either backend; selected per index via
+  ``IVFIndex(..., codec=...)`` or the ``REPRO_BUCKET_CODEC`` env.
 """
 from repro.index.ivf import IVFIndex, recall_at_k
+from repro.index.quant import (CODEC_KINDS, Codec, Fp32Codec,
+                               Int8ResidualCodec, default_codec_kind,
+                               make_codec)
 from repro.index.store import (BucketStore, PaddedBucketStore,
-                               PagedBucketStore, default_store_kind,
-                               make_store)
+                               PagedBucketStore, QuantizedBucketStore,
+                               RescoreReservoir, default_store_kind,
+                               make_quantized_store, make_store)
 
 __all__ = ["IVFIndex", "recall_at_k", "BucketStore", "PaddedBucketStore",
-           "PagedBucketStore", "default_store_kind", "make_store"]
+           "PagedBucketStore", "QuantizedBucketStore", "RescoreReservoir",
+           "default_store_kind", "make_store", "make_quantized_store",
+           "CODEC_KINDS", "Codec", "Fp32Codec", "Int8ResidualCodec",
+           "default_codec_kind", "make_codec"]

@@ -167,6 +167,62 @@ def _ivf_search(q: Array, centroids: Array, store_arrays: tuple, *,
     return ids, dist
 
 
+@functools.partial(jax.jit, static_argnames=("kind", "r", "nprobe", "width",
+                                             "ps", "nsh", "bqn", "bqk",
+                                             "bsb", "bsw", "interpret"))
+def _ivf_search_q8(q: Array, centroids: Array, store_arrays: tuple, *,
+                   kind: str, r: int, nprobe: int, width: int, ps: int,
+                   nsh: int, bqn: int, bqk: int, bsb: int, bsw: int,
+                   interpret: bool | None) -> tuple[Array, Array]:
+    """Phase 1 of two-phase search on a quantized store: the cheap
+    proposer. Probe as usual, gather int8 codes + scales instead of f32
+    rows, and scan in the residual frame — ``q' = q - anchor[cell]``
+    makes the kernel's ``||q' - r||^2`` the *true* quantized distance
+    (globally comparable across probe slots, no per-candidate anchor
+    gather). Returns the top-``r`` candidate ids (-1 where fewer than
+    ``r`` live candidates exist) and their dequantized f32 rows — the
+    rescore fallback for ids the reservoir no longer holds.
+    """
+    probe, _ = ops.flash_probe(q, centroids.astype(q.dtype), l=nprobe,
+                               block_n=bqn, block_k=bqk,
+                               interpret=interpret, want_dists=False)
+    *arrays, anchors = store_arrays
+    codes, scales, cand_ids = _store.gather_global_q8(
+        kind, tuple(arrays), probe, width, ps, nsh)
+    b, d = q.shape
+    anch = jnp.take(anchors, probe, axis=0)          # (B, nprobe, d)
+    qp = q.astype(jnp.float32)[:, None, :] - anch
+    li, val = ops.flash_probe_grouped_q8(
+        qp, codes.reshape(b, nprobe, width, d),
+        scales.reshape(b, nprobe, width), l=r,
+        block_b=bsb, block_w=bsw, interpret=interpret)   # (B, r)
+    ids = jnp.where(jnp.isfinite(val),
+                    jnp.take_along_axis(cand_ids, li, axis=1), -1)
+    deq = (jnp.take_along_axis(anch, (li // width)[:, :, None], axis=1)
+           + jnp.take_along_axis(codes, li[:, :, None], axis=1
+                                 ).astype(jnp.float32)
+           * jnp.take_along_axis(scales, li, axis=1)[:, :, None])
+    return ids, deq
+
+
+@functools.partial(jax.jit, static_argnames=("topk", "bsb", "bsc",
+                                             "interpret"))
+def _ivf_rescore(q: Array, cand: Array, ids: Array, res_rows: Array,
+                 found: Array, *, topk: int, bsb: int, bsc: int,
+                 interpret: bool | None) -> tuple[Array, Array]:
+    """Phase 2: exact verify. Score the ``r`` proposed rows at full
+    precision — the reservoir's original rows where resident, the
+    dequantized codes otherwise (same overlay ``dense()`` applies, so
+    two-phase and brute-force score literally identical rows) — and
+    keep the true top-k. Dead proposals (id -1) become padding rows."""
+    cand = jnp.where(found[:, :, None], res_rows, cand)
+    cand = jnp.where((ids < 0)[:, :, None], _PAD_COORD, cand)
+    li, dist = ops.flash_probe_grouped(q.astype(cand.dtype), cand, l=topk,
+                                       block_b=bsb, block_c=bsc,
+                                       interpret=interpret)
+    return jnp.take_along_axis(ids, li, axis=1), dist
+
+
 class IVFIndex:
     """Online IVF index: coarse k-means cells + CSR posting lists.
 
@@ -178,7 +234,13 @@ class IVFIndex:
 
     ``store`` selects the posting-list backend ("padded" | "paged",
     default from ``REPRO_BUCKET_STORE``); an already-built
-    ``BucketStore`` instance is also accepted.
+    ``BucketStore`` instance is also accepted. ``codec`` selects the
+    payload codec ("fp32" | "q8", default from ``REPRO_BUCKET_CODEC``)
+    — orthogonal to the backend axis: a "q8" index wraps either backend
+    in a ``QuantizedBucketStore`` (anchored at the build-time
+    centroids) and searches in two phases (quantized top-R proposal,
+    exact fp32 rescore; ``R = rescore_mult * topk``). ``rescore_bytes``
+    budgets the full-precision rescore reservoir (None = unbounded).
     """
 
     def __init__(self, centroids: Array, capacity: int, *,
@@ -187,12 +249,15 @@ class IVFIndex:
                  planner: "_plan.KernelPlanner | None" = None,
                  pctx=None, store: "str | _store.BucketStore | None" = None,
                  page_size: int | None = None,
-                 store_bytes: int | None = None):
+                 store_bytes: int | None = None,
+                 codec: str | None = None, rescore_mult: int = 4,
+                 rescore_bytes: int | None = None):
         k, d = centroids.shape
         self.centroids = centroids
         self.k, self.d = k, d
         self.interpret = interpret
         self.pctx = pctx
+        self.rescore_mult = max(1, int(rescore_mult))
         n_shards = 1
         if pctx is not None and pctx.k_axis is not None:
             pctx.k_local(k)   # raises unless K divides the cells axis
@@ -200,10 +265,22 @@ class IVFIndex:
         if isinstance(store, _store.BucketStore):
             self.store = store
         else:
-            self.store = _store.make_store(
-                store, k, d, centroids.dtype, capacity=int(capacity),
-                max_cap=max_cap, page_size=page_size,
-                max_bytes=store_bytes, n_shards=n_shards)
+            from repro.index.quant import default_codec_kind
+            codec = default_codec_kind() if codec is None else codec
+            if codec == "fp32":
+                self.store = _store.make_store(
+                    store, k, d, centroids.dtype, capacity=int(capacity),
+                    max_cap=max_cap, page_size=page_size,
+                    max_bytes=store_bytes, n_shards=n_shards)
+            else:
+                # quantized payloads are anchored at the *build-time*
+                # centroids: refresh() moves the routing centroids only,
+                # so stored codes stay decodable without re-encoding
+                self.store = _store.make_quantized_store(
+                    store, k, d, centroids.dtype, anchors=centroids,
+                    codec=codec, capacity=int(capacity), max_cap=max_cap,
+                    page_size=page_size, max_bytes=store_bytes,
+                    n_shards=n_shards, rescore_bytes=rescore_bytes)
         self.n_total = 0
         # reliability state: the optional fault injector and repair
         # counters (spill/evict accounting lives in the store)
@@ -281,6 +358,11 @@ class IVFIndex:
     def store_kind(self) -> str:
         return self.store.kind
 
+    @property
+    def codec_kind(self) -> str:
+        """Payload codec of the posting-list store ("fp32" | "q8")."""
+        return self.store.codec_kind
+
     def resident_bytes(self) -> int:
         """Device bytes held by the posting-list payload (+ tables)."""
         return self.store.resident_bytes()
@@ -332,7 +414,9 @@ class IVFIndex:
               planner: "_plan.KernelPlanner | None" = None,
               pctx=None, store: "str | None" = None,
               page_size: int | None = None,
-              store_bytes: int | None = None) -> "IVFIndex":
+              store_bytes: int | None = None,
+              codec: str | None = None, rescore_mult: int = 4,
+              rescore_bytes: int | None = None) -> "IVFIndex":
         """Train coarse centroids and invert the corpus into posting lists.
 
         ``x``: (N, d) array — or, with ``chunk_size`` set, a host numpy
@@ -376,7 +460,9 @@ class IVFIndex:
             index = cls(centroids, cap, max_cap=max_cap,
                         interpret=interpret, planner=planner, pctx=pctx,
                         store=store, page_size=page_size,
-                        store_bytes=store_bytes)
+                        store_bytes=store_bytes, codec=codec,
+                        rescore_mult=rescore_mult,
+                        rescore_bytes=rescore_bytes)
             index._fold(xj, a, m)
         else:
             # out-of-core: ChunkedKMeans trains (init from the first
@@ -388,7 +474,9 @@ class IVFIndex:
             index = cls(centroids, capacity if capacity is not None else 8,
                         max_cap=max_cap, interpret=interpret,
                         planner=planner, pctx=pctx, store=store,
-                        page_size=page_size, store_bytes=store_bytes)
+                        page_size=page_size, store_bytes=store_bytes,
+                        codec=codec, rescore_mult=rescore_mult,
+                        rescore_bytes=rescore_bytes)
             for chunk in driver._chunks(x):
                 index.add(chunk)
         # build-time evidence is the committed baseline, not drift:
@@ -615,8 +703,15 @@ class IVFIndex:
             return (nprobe, topk, width, self.pctx.n_k_shards)
         return (nprobe, topk, width)
 
+    def _rescore_r(self, topk: int, nprobe: int, width: int) -> int:
+        """Phase-1 proposal depth for two-phase search: ``rescore_mult``
+        times the final ``topk``, clamped to the probed candidate pool
+        (so full-nprobe searches can never ask for more proposals than
+        candidates exist)."""
+        return min(max(topk, self.rescore_mult * topk), nprobe * width)
+
     def plan_search(self, b: int, topk: int = 10, nprobe: int = 8
-                    ) -> tuple[int, int, int, int]:
+                    ) -> tuple[int, ...]:
         """Plan (and cache) the two search-stage kernels for a geometry.
 
         Returns ``(bqn, bqk, bsb, bsc)`` — probe and scan tiles for a
@@ -654,8 +749,25 @@ class IVFIndex:
         if plans is None:
             dt = self.dtype
             probe = self.planner.plan("probe", probe_shape, dt)
-            scan = self.planner.plan("scan", scan_shape, dt)
-            plans = (*probe.blocks, *scan.blocks)
+            if self.store.codec_kind != "fp32":
+                # two-phase geometry: the quantized proposal scan is
+                # planned as "scan_q8" (codec-aware bytes model) at the
+                # proposal depth, the exact rescore as a plain f32 scan
+                # over the R proposed rows (full batch — the rescore is
+                # never sharded; proposals already crossed the wire)
+                r = self._rescore_r(topk, nprobe, width)
+                if self._k_sharded:
+                    rl = min(r, scan_shape[1])
+                    q8_shape = (scan_shape[0], scan_shape[1], self.d, rl)
+                else:
+                    q8_shape = (b, nprobe * width, self.d, r)
+                q8 = self.planner.plan("scan_q8", q8_shape, jnp.int8)
+                rescore = self.planner.plan(
+                    "scan", (int(b), r, self.d, min(topk, r)), jnp.float32)
+                plans = (*probe.blocks, *q8.blocks, *rescore.blocks)
+            else:
+                scan = self.planner.plan("scan", scan_shape, dt)
+                plans = (*probe.blocks, *scan.blocks)
             self._search_plans[geom] = plans
         return plans
 
@@ -689,6 +801,8 @@ class IVFIndex:
                     else:   # one replica == the whole index: hard fail
                         raise InjectedFault(
                             f"injected replica death ({ev})")
+        if self.store.codec_kind != "fp32":
+            return self._search_q8(q, topk, nprobe, shard_ok=shard_ok)
         if self._k_sharded:
             return self._search_sharded(q, topk, nprobe,
                                         shard_ok=shard_ok)
@@ -700,6 +814,150 @@ class IVFIndex:
                            ps=st.page_param, nsh=st.n_shards,
                            bqn=bqn, bqk=bqk, bsb=bsb, bsc=bsc,
                            interpret=self.interpret)
+
+    def _search_q8(self, q: Array, topk: int, nprobe: int,
+                   shard_ok=None) -> tuple[Array, Array]:
+        """Two-phase search on a quantized store.
+
+        Phase 1 proposes the top-``R`` candidates from the int8 payload
+        (``R = rescore_mult * topk``, clamped to the probed pool) — on a
+        mesh, each shard scans its owned buckets and the proposals merge
+        exactly like the fp32 path's final top-k, followed by one
+        O(b·R·d) psum row exchange so every proposal's dequantized row
+        is batch-local. Phase 2 overlays the rescore reservoir's
+        original rows (host lookup by id; decoded codes where evicted)
+        and rescores the R rows at full precision for the final top-k.
+        At full ``nprobe`` with R covering the live candidates this
+        reproduces brute force exactly.
+        """
+        st = self.store
+        b = q.shape[0]
+        width = self._gather_width(topk, nprobe)
+        r = self._rescore_r(topk, nprobe, width)
+        if self._k_sharded:
+            pctx = self.pctx
+            pd = pctx.n_data_shards
+            b_pad = ((b + pd - 1) // pd) * pd
+            if b_pad != b:
+                q = jnp.pad(q, ((0, b_pad - b), (0, 0)))
+            *_, brb, brc = self.plan_search(b_pad, topk, nprobe)
+            key = ("q8", b_pad, nprobe, topk, width)
+            prog = self._sharded_search.get(key)
+            if prog is None:
+                prog = self._make_sharded_q8_candidates(b_pad, topk,
+                                                        nprobe)
+                self._sharded_search[key] = prog
+            if shard_ok is None:
+                shard_ok = np.ones(pctx.n_k_shards, bool)
+            ids, deq = prog(pctx.shard_points(q), self.centroids,
+                            *st.device_arrays(), jnp.asarray(shard_ok))
+        else:
+            bqn, bqk, bsb, bsw, brb, brc = self.plan_search(b, topk,
+                                                            nprobe)
+            ids, deq = _ivf_search_q8(
+                q, self.centroids, st.device_arrays(), kind=st.kind,
+                r=r, nprobe=nprobe, width=width, ps=st.page_param,
+                nsh=st.n_shards, bqn=bqn, bqk=bqk, bsb=bsb, bsw=bsw,
+                interpret=self.interpret)
+        ids_np = np.asarray(ids)
+        res = getattr(st, "reservoir", None)
+        if res is not None:
+            rows, found = res.lookup(ids_np)
+        else:
+            rows = np.zeros(ids_np.shape + (self.d,), np.float32)
+            found = np.zeros(ids_np.shape, bool)
+        out_ids, dist = _ivf_rescore(q, deq, ids, jnp.asarray(rows),
+                                     jnp.asarray(found), topk=topk,
+                                     bsb=brb, bsc=brc,
+                                     interpret=self.interpret)
+        return out_ids[:b], dist[:b]
+
+    def _make_sharded_q8_candidates(self, b_pad: int, topk: int,
+                                    nprobe: int):
+        """Phase-1 proposal program under cells sharding: the fp32
+        sharded search's probe/compact/scan skeleton with the quantized
+        kernel in the scan seat, a top-R (not top-k) merge, and one
+        psum row exchange — each proposal's dequantized row is summed
+        across shards through a one-hot id match (every live id is
+        owned by exactly one shard), so the host-side rescore sees the
+        same (ids, rows) contract as the single-device phase 1."""
+        pctx = self.pctx
+        ka = pctx.k_axis
+        k_local = pctx.k_local(self.k)
+        st = self.store
+        kind, ps = st.kind, st.page_param
+        width = self._gather_width(topk, nprobe)
+        r = self._rescore_r(topk, nprobe, width)
+        ll = min(nprobe, k_local)       # a query probes <= ll owned cells
+        rl = min(r, ll * width)         # local proposal-list length
+        bqn, bqk, bsb, bsw, _, _ = self.plan_search(b_pad, topk, nprobe)
+        interpret = self.interpret
+        d = self.d
+
+        def shard_fn(q, c_local, *rest):
+            *arrays, anchors_l, shard_ok = rest
+            bl = q.shape[0]
+            alive = shard_ok[jax.lax.axis_index(ka)]
+            idx, val = ops.flash_probe(q, c_local.astype(q.dtype), l=ll,
+                                       block_n=bqn, block_k=bqk,
+                                       interpret=interpret,
+                                       want_dists=False)
+            lo = jax.lax.axis_index(ka) * k_local
+            gcell, _ = pctx.merge_topl(idx + lo, val, nprobe,
+                                       valid=alive)   # (bl, nprobe)
+            rel = gcell - lo
+            owned = jnp.logical_and(rel >= 0, rel < k_local)
+            pos = jax.lax.broadcasted_iota(jnp.int32, (bl, nprobe), 1)
+            order = jnp.argsort(jnp.where(owned, pos, nprobe),
+                                axis=1)[:, :ll]
+            cell = jnp.take_along_axis(rel, order, axis=1)
+            ok = jnp.take_along_axis(owned, order, axis=1)
+            cell = jnp.where(ok, cell, k_local)
+            codes, scales, cand_ids = _store.gather_cells_q8(
+                kind, tuple(arrays), cell, width, ps)
+            # residual-frame queries: the padding cell k_local maps to a
+            # zero anchor row — its slots carry scale 0.0 and mask out
+            anch = jnp.take(
+                jnp.concatenate([anchors_l.astype(jnp.float32),
+                                 jnp.zeros((1, d), jnp.float32)], axis=0),
+                cell, axis=0)                        # (bl, ll, d)
+            qp = q.astype(jnp.float32)[:, None, :] - anch
+            lidx, lval = ops.flash_probe_grouped_q8(
+                qp, codes.reshape(bl, ll, width, d),
+                scales.reshape(bl, ll, width), l=rl,
+                block_b=bsb, block_w=bsw, interpret=interpret)
+            ids_loc = jnp.where(
+                jnp.isfinite(lval),
+                jnp.take_along_axis(cand_ids, lidx, axis=1), -1)
+            # same global probe-rank-major tie key as the fp32 merge
+            gpos = (jnp.take_along_axis(order, lidx // width, axis=1)
+                    * width + lidx % width)
+            gids, _ = pctx.merge_topl(ids_loc, lval, r, tie=gpos,
+                                      valid=alive)   # (bl, r)
+            # row exchange: dequantize the local proposals, match them
+            # against the merged id list, and psum — O(b·r·d) wire bytes
+            deq_loc = (jnp.take_along_axis(anch, (lidx // width)[:, :, None],
+                                           axis=1)
+                       + jnp.take_along_axis(codes, lidx[:, :, None], axis=1
+                                             ).astype(jnp.float32)
+                       * jnp.take_along_axis(scales, lidx,
+                                             axis=1)[:, :, None])
+            match = jnp.logical_and(
+                gids[:, :, None] == ids_loc[:, None, :],
+                (ids_loc >= 0)[:, None, :]).astype(jnp.float32)
+            rows = jax.lax.psum(jnp.einsum("brl,bld->brd", match, deq_loc),
+                                ka)
+            hit = jax.lax.psum(jnp.sum(match, axis=-1), ka)
+            rows = jnp.where((hit > 0.0)[:, :, None], rows, _PAD_COORD)
+            return gids, rows
+
+        fn = pctx.spmd(
+            shard_fn,
+            in_specs=(pctx.data_spec, P(ka, None),
+                      *st.shard_specs(ka), P(None)),
+            out_specs=(P(pctx.data_axes, None),
+                       P(pctx.data_axes, None, None)))
+        return jax.jit(fn)
 
     def _search_sharded(self, q: Array, topk: int, nprobe: int,
                         shard_ok=None) -> tuple[Array, Array]:
@@ -866,5 +1124,7 @@ class IVFIndex:
     def __repr__(self) -> str:
         shard = (f", cells_sharded x{self.pctx.n_k_shards}"
                  if self._k_sharded else "")
+        codec = (f", codec={self.store.codec_kind}"
+                 if self.store.codec_kind != "fp32" else "")
         return (f"IVFIndex(k={self.k}, d={self.d}, n={self.n_total}, "
-                f"cap={self.cap}, store={self.store.kind}{shard})")
+                f"cap={self.cap}, store={self.store.kind}{codec}{shard})")

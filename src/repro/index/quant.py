@@ -1,0 +1,130 @@
+"""Bucket payload codecs — the cheap-propose half of two-phase search.
+
+The grouped posting-list scan is IO-bound: it streams ``(cap, d)``
+payload tiles from HBM for every probed cell. A ``Codec`` decides what
+those payload bytes *are*. ``Fp32Codec`` is the historical identity
+layout; ``Int8ResidualCodec`` stores per-slot symmetric int8 codes of
+the residual ``x - anchor[cell]`` (anchor = the cell centroid at
+encode time) plus one f32 scale per slot, cutting payload bytes to
+``d + 4`` per row from ``4·d`` — ~3.6× at d = 32, asymptotically 4×.
+
+Exactness is *not* the codec's job: the quantized scan only proposes a
+top-``R`` candidate set, and ``IVFIndex.search`` rescores those ``R``
+rows at full precision (from the rescore reservoir, or the decoded
+codes as fallback) before the final top-k — the spec-decode
+cheap-propose / exact-verify split. The rounding convention is the
+repo-wide one in ``core.quant8``, shared with
+``optim/compression.py``.
+
+Codecs are selected per index via ``IVFIndex(..., codec=...)`` /
+``--codec`` / the ``REPRO_BUCKET_CODEC`` env (mirroring the bucket
+store axis), and ride in snapshot manifests (v3) as
+``store.meta()["codec"]``.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant8 import (dequantize_symmetric, quantize_symmetric,
+                               symmetric_scale)
+
+Array = jax.Array
+
+CODEC_KINDS = ("fp32", "q8")
+
+
+def default_codec_kind() -> str:
+    """Process-wide default codec: ``REPRO_BUCKET_CODEC`` env, else fp32."""
+    kind = os.environ.get("REPRO_BUCKET_CODEC", "fp32").strip().lower()
+    if kind not in CODEC_KINDS:
+        raise ValueError(f"REPRO_BUCKET_CODEC={kind!r}: "
+                         f"expected one of {CODEC_KINDS}")
+    return kind
+
+
+class Codec:
+    """Contract for bucket payload codecs.
+
+    ``encode(points, centroid)`` -> ``(codes, scales)`` where ``codes``
+    has the payload dtype (what the store's pool holds) and ``scales``
+    is one f32 per row (the store's aux channel; fp32 encodes scale 1).
+    ``decode(codes, scales, centroid)`` inverts it to f32 rows.
+    ``score_bytes(d)`` is the modeled HBM bytes per scanned row — the
+    planner's codec-aware scan traffic model.
+    """
+
+    kind: str = "fp32"
+    pool_dtype = jnp.float32
+
+    def encode(self, points: Array, centroid: Array
+               ) -> tuple[Array, Array]:
+        raise NotImplementedError
+
+    def decode(self, codes: Array, scales: Array, centroid: Array
+               ) -> Array:
+        raise NotImplementedError
+
+    def score_bytes(self, d: int) -> int:
+        """Modeled HBM bytes streamed per row of a grouped scan."""
+        raise NotImplementedError
+
+    def meta(self) -> dict:
+        return {"kind": self.kind}
+
+
+class Fp32Codec(Codec):
+    """Identity codec: payload rows are the f32 points themselves."""
+
+    kind = "fp32"
+    pool_dtype = jnp.float32
+
+    def encode(self, points, centroid):
+        points = jnp.asarray(points, jnp.float32)
+        return points, jnp.ones(points.shape[:-1], jnp.float32)
+
+    def decode(self, codes, scales, centroid):
+        del scales, centroid
+        return jnp.asarray(codes, jnp.float32)
+
+    def score_bytes(self, d: int) -> int:
+        return 4 * d
+
+
+class Int8ResidualCodec(Codec):
+    """Per-slot symmetric int8 over the residual ``x - centroid[c]``.
+
+    One f32 scale per slot (row): residual magnitudes vary by row much
+    more than by coordinate within a cell, so per-slot absmax keeps the
+    quantization step proportional to each point's own distance from
+    the anchor — near-anchor points (the ones that matter for top-k)
+    get the finest grid. Scale is strictly positive for real rows
+    (``core.quant8.SCALE_EPS`` floor) and exactly 0.0 for empty slots,
+    which is how the scan kernel masks padding without an id lookup.
+    """
+
+    kind = "q8"
+    pool_dtype = jnp.int8
+
+    def encode(self, points, centroid):
+        resid = jnp.asarray(points, jnp.float32) - centroid
+        scale = symmetric_scale(jnp.max(jnp.abs(resid), axis=-1))
+        return quantize_symmetric(resid, scale[..., None]), scale
+
+    def decode(self, codes, scales, centroid):
+        return centroid + dequantize_symmetric(codes, scales[..., None])
+
+    def score_bytes(self, d: int) -> int:
+        return d + 4          # int8 codes + one f32 scale per row
+
+
+def make_codec(kind: str | None = None) -> Codec:
+    kind = default_codec_kind() if kind is None else kind
+    if kind == "fp32":
+        return Fp32Codec()
+    if kind == "q8":
+        return Int8ResidualCodec()
+    raise ValueError(f"unknown codec kind {kind!r}: "
+                     f"expected one of {CODEC_KINDS}")

@@ -76,6 +76,22 @@ def _ceil_div(a: int, b: int) -> int:
     return -(-int(a) // int(b))
 
 
+def _pad_value(dtype):
+    """Padding payload for a pool of ``dtype``: the far-away sentinel
+    for float payloads; 0 for integer code pools (quantized stores mask
+    padding via the zero scale channel, not the coordinate value)."""
+    return _PAD_COORD if jnp.dtype(dtype).kind == "f" else 0
+
+
+def _sublane_min(dtype) -> int:
+    """The planner's minimum sublane tile for ``dtype`` (TPU native
+    tiling: (8, 128) f32, (16, 128) bf16, (32, 128) int8). Gather-width
+    bucketing floors here so a nearly-empty store — e.g. right after
+    heavy LRU eviction — never hands the scan a degenerate sub-tile
+    candidate width."""
+    return max(8, 32 // max(1, jnp.dtype(dtype).itemsize))
+
+
 def default_store_kind() -> str:
     """The process-wide default backend (``REPRO_BUCKET_STORE`` env)."""
     kind = os.environ.get("REPRO_BUCKET_STORE", "padded").strip().lower()
@@ -103,7 +119,11 @@ def make_store(kind: str | None, k: int, d: int, dtype, *, capacity: int = 8,
 
 def restore_store(host: dict, meta: dict, *, k: int, d: int, dtype,
                   n_shards: int = 1) -> "BucketStore":
-    """Rebuild a store from snapshot arrays + manifest meta (any mesh)."""
+    """Rebuild a store from snapshot arrays + manifest meta (any mesh).
+    Manifests without a ``codec`` key (snapshot v1/v2) are fp32."""
+    if meta.get("codec", "fp32") != "fp32":
+        return QuantizedBucketStore.restore(host, meta, k=k, d=d,
+                                            dtype=dtype, n_shards=n_shards)
     kind = meta.get("kind", "padded")
     if kind == "padded":
         return PaddedBucketStore.restore(host, meta, k=k, d=d, dtype=dtype)
@@ -195,6 +215,64 @@ def gather_cells(kind: str, arrays, cell: Array, width: int,
             pool_ids[pid].reshape(bl, ll * wp * page_size))
 
 
+def gather_global_q8(kind: str, arrays, probe: Array, width: int,
+                     page_size: int, n_shards: int
+                     ) -> tuple[Array, Array, Array]:
+    """Quantized-store variant of ``gather_global``: the payload is int8
+    codes plus the per-slot f32 scale channel. Returns ``(codes
+    (B, nprobe*width, d) int8, scales (B, nprobe*width) f32, ids)``.
+    Padding slots carry scale exactly 0.0 — the scan kernel's mask."""
+    b, nprobe = probe.shape
+    if kind == "padded":
+        buckets, bucket_ids, bucket_aux = arrays
+        d = buckets.shape[-1]
+        return (buckets[:, :width][probe].reshape(b, nprobe * width, d),
+                bucket_aux[:, :width][probe].reshape(b, nprobe * width),
+                bucket_ids[:, :width][probe].reshape(b, nprobe * width))
+    pool, pool_ids, tables, pool_aux = arrays
+    d = pool.shape[-1]
+    wp = width // page_size
+    pps = pool.shape[0] // n_shards
+    cps = tables.shape[0] // n_shards
+    pid = ((probe // cps)[:, :, None] * pps
+           + tables[:, :wp][probe]).reshape(b, nprobe * wp)
+    w = nprobe * wp * page_size
+    return (pool[pid].reshape(b, w, d), pool_aux[pid].reshape(b, w),
+            pool_ids[pid].reshape(b, w))
+
+
+def gather_cells_q8(kind: str, arrays, cell: Array, width: int,
+                    page_size: int) -> tuple[Array, Array, Array]:
+    """Quantized-store variant of ``gather_cells`` (shard-local). The
+    padding cell ``k_local`` lands on zero-scale slots, so its rows mask
+    out of the scan exactly like unmapped pages."""
+    bl, ll = cell.shape
+    if kind == "padded":
+        buckets, bucket_ids, bucket_aux = arrays
+        k_local, _, d = buckets.shape
+        bpad = jnp.concatenate(
+            [buckets[:, :width],
+             jnp.zeros((1, width, d), buckets.dtype)], axis=0)
+        apad = jnp.concatenate(
+            [bucket_aux[:, :width],
+             jnp.zeros((1, width), jnp.float32)], axis=0)
+        ipad = jnp.concatenate(
+            [bucket_ids[:, :width],
+             jnp.full((1, width), -1, jnp.int32)], axis=0)
+        return (bpad[cell].reshape(bl, ll * width, d),
+                apad[cell].reshape(bl, ll * width),
+                ipad[cell].reshape(bl, ll * width))
+    pool, pool_ids, tables, pool_aux = arrays
+    d = pool.shape[-1]
+    wp = width // page_size
+    tpad = jnp.concatenate(
+        [tables[:, :wp], jnp.zeros((1, wp), jnp.int32)], axis=0)
+    pid = tpad[cell].reshape(bl, ll * wp)
+    w = ll * wp * page_size
+    return (pool[pid].reshape(bl, w, d), pool_aux[pid].reshape(bl, w),
+            pool_ids[pid].reshape(bl, w))
+
+
 # ---------------------------------------------------------------------------
 # the store contract
 # ---------------------------------------------------------------------------
@@ -205,6 +283,7 @@ class BucketStore:
     benchmarks) goes through. See the module docstring."""
 
     kind = "abstract"
+    codec_kind = "fp32"     # payload codec (QuantizedBucketStore overrides)
 
     def __init__(self, k: int, d: int, dtype, *, max_cap: int | None = None):
         self.k, self.d = int(k), int(d)
@@ -314,20 +393,24 @@ class PaddedBucketStore(BucketStore):
     kind = "padded"
 
     def __init__(self, k: int, d: int, dtype, *, capacity: int = 8,
-                 max_cap: int | None = None):
+                 max_cap: int | None = None, aux: bool = False):
         super().__init__(k, d, dtype, max_cap=max_cap)
         self.cap = max(8, _round_up(int(capacity), 8))
         if self.max_cap is not None:
             self.cap = min(self.cap, self.max_cap)
-        self.buckets = jnp.full((self.k, self.cap, self.d), _PAD_COORD,
-                                self.dtype)
+        self.buckets = jnp.full((self.k, self.cap, self.d),
+                                _pad_value(self.dtype), self.dtype)
         self.bucket_ids = jnp.full((self.k, self.cap), -1, jnp.int32)
+        # optional per-slot f32 sidecar (codec scales); 0.0 = empty slot
+        self.has_aux = bool(aux)
+        self.bucket_aux = jnp.zeros((self.k, self.cap), jnp.float32) \
+            if self.has_aux else None
 
     @property
     def capacity(self) -> int:
         return self.cap
 
-    def append(self, cells, x_sorted, ids):
+    def append(self, cells, x_sorted, ids, aux=None):
         n = int(cells.shape[0])
         if n == 0:
             return
@@ -343,8 +426,10 @@ class PaddedBucketStore(BucketStore):
             self._account_spill(cells[~keep])
             kj = np.flatnonzero(keep)
             cells, slots, ids = cells[kj], slots[kj], ids[kj]
-            x_sorted = jnp.take(x_sorted, jnp.asarray(kj, jnp.int32),
-                                axis=0)
+            kj = jnp.asarray(kj, jnp.int32)
+            x_sorted = jnp.take(x_sorted, kj, axis=0)
+            if aux is not None:
+                aux = jnp.take(aux, kj, axis=0)
         if cells.size:
             cj = jnp.asarray(cells, jnp.int32)
             sj = jnp.asarray(slots, jnp.int32)
@@ -352,6 +437,9 @@ class PaddedBucketStore(BucketStore):
                 x_sorted.astype(self.dtype))
             self.bucket_ids = self.bucket_ids.at[cj, sj].set(
                 jnp.asarray(ids))
+            if self.has_aux and aux is not None:
+                self.bucket_aux = self.bucket_aux.at[cj, sj].set(
+                    jnp.asarray(aux, jnp.float32))
             self._counts_np += np.bincount(
                 cells, minlength=self.k).astype(np.int64)
             self.counts = jnp.asarray(self._counts_np, jnp.int32)
@@ -365,20 +453,28 @@ class PaddedBucketStore(BucketStore):
             return
         pad = new_cap - self.cap
         self.buckets = jnp.pad(self.buckets, ((0, 0), (0, pad), (0, 0)),
-                               constant_values=_PAD_COORD)
+                               constant_values=_pad_value(self.dtype))
         self.bucket_ids = jnp.pad(self.bucket_ids, ((0, 0), (0, pad)),
                                   constant_values=-1)
+        if self.has_aux:
+            self.bucket_aux = jnp.pad(self.bucket_aux,
+                                      ((0, 0), (0, pad)))
         self.cap = new_cap
 
     def gather_width(self, min_slots: int = 1) -> int:
-        w = _pow2ceil(max(8, self.max_count))
-        w = max(w, _round_up(max(1, min_slots), 8))
+        sl = _sublane_min(self.dtype)
+        w = _pow2ceil(max(sl, self.max_count))
+        w = max(w, _round_up(max(1, min_slots), sl))
         return min(self.cap, w)
 
     def device_arrays(self):
+        if self.has_aux:
+            return (self.buckets, self.bucket_ids, self.bucket_aux)
         return (self.buckets, self.bucket_ids)
 
     def shard_specs(self, ka):
+        if self.has_aux:
+            return (P(ka, None, None), P(ka, None), P(ka, None))
         return (P(ka, None, None), P(ka, None))
 
     def dense(self):
@@ -392,10 +488,13 @@ class PaddedBucketStore(BucketStore):
                 self.bucket_ids.reshape(self.k * self.cap))
 
     def state_arrays(self):
-        return {"buckets": np.asarray(self.buckets),
-                "bucket_ids": np.asarray(self.bucket_ids),
-                "counts": np.asarray(self.counts),
-                "spill_counts": self.spill_counts}
+        out = {"buckets": np.asarray(self.buckets),
+               "bucket_ids": np.asarray(self.bucket_ids),
+               "counts": np.asarray(self.counts),
+               "spill_counts": self.spill_counts}
+        if self.has_aux:
+            out["bucket_aux"] = np.asarray(self.bucket_aux)
+        return out
 
     def meta(self):
         return {"kind": self.kind, "cap": self.cap, "max_cap": self.max_cap,
@@ -404,10 +503,13 @@ class PaddedBucketStore(BucketStore):
     @classmethod
     def restore(cls, host, meta, *, k, d, dtype):
         st = cls(k, d, dtype, capacity=meta["cap"],
-                 max_cap=meta.get("max_cap"))
+                 max_cap=meta.get("max_cap"),
+                 aux="bucket_aux" in host)
         assert st.cap == meta["cap"], "capacity rounding drifted"
         st.buckets = jnp.asarray(host["buckets"])
         st.bucket_ids = jnp.asarray(host["bucket_ids"])
+        if st.has_aux:
+            st.bucket_aux = jnp.asarray(host["bucket_aux"])
         st.counts = jnp.asarray(host["counts"])
         st._counts_np = np.asarray(host["counts"]).astype(np.int64)
         st.spilled = int(meta.get("spilled", host["spill_counts"].sum()))
@@ -418,10 +520,13 @@ class PaddedBucketStore(BucketStore):
         ka = pctx.k_axis
         self.buckets = pctx.put(self.buckets, P(ka, None, None))
         self.bucket_ids = pctx.put(self.bucket_ids, P(ka, None))
+        if self.has_aux:
+            self.bucket_aux = pctx.put(self.bucket_aux, P(ka, None))
         self.counts = pctx.put(self.counts, P(ka))
 
     def resident_bytes(self) -> int:
-        return self.k * self.cap * (self.d * self.dtype.itemsize + 4)
+        aux = 4 if self.has_aux else 0
+        return self.k * self.cap * (self.d * self.dtype.itemsize + 4 + aux)
 
     def block_until_ready(self) -> None:
         jax.block_until_ready(self.buckets)
@@ -444,8 +549,10 @@ class PagedBucketStore(BucketStore):
 
     def __init__(self, k: int, d: int, dtype, *, capacity: int = 8,
                  max_cap: int | None = None, page_size: int = 64,
-                 max_bytes: int | None = None, n_shards: int = 1):
+                 max_bytes: int | None = None, n_shards: int = 1,
+                 aux: bool = False):
         super().__init__(k, d, dtype, max_cap=max_cap)
+        self.has_aux = bool(aux)
         self.page_size = max(8, _round_up(int(page_size), 8))
         if k % n_shards:
             raise ValueError(f"k={k} not divisible by n_shards={n_shards}")
@@ -472,9 +579,13 @@ class PagedBucketStore(BucketStore):
                       for _ in range(self._n_shards)]
         self.pool = jnp.full(
             (self._n_shards * self.pps, self.page_size, self.d),
-            _PAD_COORD, self.dtype)
+            _pad_value(self.dtype), self.dtype)
         self.pool_ids = jnp.full(
             (self._n_shards * self.pps, self.page_size), -1, jnp.int32)
+        # optional per-slot f32 sidecar (codec scales); 0.0 = empty slot
+        self.pool_aux = jnp.zeros(
+            (self._n_shards * self.pps, self.page_size), jnp.float32) \
+            if self.has_aux else None
 
     # -- geometry ------------------------------------------------------
 
@@ -491,7 +602,8 @@ class PagedBucketStore(BucketStore):
         return self._n_shards
 
     def _page_bytes(self) -> int:
-        return self.page_size * (self.d * self.dtype.itemsize + 4)
+        aux = 4 if self.has_aux else 0
+        return self.page_size * (self.d * self.dtype.itemsize + 4 + aux)
 
     def _budget_pps(self) -> int:
         return int(self.max_bytes
@@ -507,11 +619,17 @@ class PagedBucketStore(BucketStore):
         self.pool = jnp.pad(
             self.pool.reshape(s, self.pps, ps, d),
             ((0, 0), (0, new_pps - self.pps), (0, 0), (0, 0)),
-            constant_values=_PAD_COORD).reshape(s * new_pps, ps, d)
+            constant_values=_pad_value(self.dtype)
+            ).reshape(s * new_pps, ps, d)
         self.pool_ids = jnp.pad(
             self.pool_ids.reshape(s, self.pps, ps),
             ((0, 0), (0, new_pps - self.pps), (0, 0)),
             constant_values=-1).reshape(s * new_pps, ps)
+        if self.has_aux:
+            self.pool_aux = jnp.pad(
+                self.pool_aux.reshape(s, self.pps, ps),
+                ((0, 0), (0, new_pps - self.pps), (0, 0))
+                ).reshape(s * new_pps, ps)
         for sh in range(s):
             self._free[sh].extend(range(self.pps, new_pps))
         self.pps = new_pps
@@ -534,8 +652,10 @@ class PagedBucketStore(BucketStore):
         pids = self.tables_np[cell, :npg].tolist()
         sh = cell // self.cells_per_shard
         gp = jnp.asarray([sh * self.pps + p for p in pids], jnp.int32)
-        self.pool = self.pool.at[gp].set(_PAD_COORD)
+        self.pool = self.pool.at[gp].set(_pad_value(self.dtype))
         self.pool_ids = self.pool_ids.at[gp].set(-1)
+        if self.has_aux:
+            self.pool_aux = self.pool_aux.at[gp].set(0.0)
         lost = int(self._counts_np[cell])
         self.evict_counts[cell] += lost
         self.evicted += lost
@@ -570,7 +690,7 @@ class PagedBucketStore(BucketStore):
 
     # -- the contract --------------------------------------------------
 
-    def append(self, cells, x_sorted, ids):
+    def append(self, cells, x_sorted, ids, aux=None):
         n = int(cells.shape[0])
         if n == 0:
             return
@@ -585,8 +705,10 @@ class PagedBucketStore(BucketStore):
                 self._account_spill(cells[over])
                 kj = np.flatnonzero(~over)
                 cells, slots, ids = cells[kj], slots[kj], ids[kj]
-                x_sorted = jnp.take(x_sorted, jnp.asarray(kj, jnp.int32),
-                                    axis=0)
+                kj = jnp.asarray(kj, jnp.int32)
+                x_sorted = jnp.take(x_sorted, kj, axis=0)
+                if aux is not None:
+                    aux = jnp.take(aux, kj, axis=0)
         ucells, ustart = np.unique(cells, return_index=True)
         uend = np.r_[ustart[1:], cells.size] - 1
         umax = slots[uend] if cells.size else np.zeros(0, np.int64)
@@ -611,8 +733,10 @@ class PagedBucketStore(BucketStore):
             self._account_spill(cells[over])
             kj = np.flatnonzero(~over)
             cells, slots, ids = cells[kj], slots[kj], ids[kj]
-            x_sorted = jnp.take(x_sorted, jnp.asarray(kj, jnp.int32),
-                                axis=0)
+            kj = jnp.asarray(kj, jnp.int32)
+            x_sorted = jnp.take(x_sorted, kj, axis=0)
+            if aux is not None:
+                aux = jnp.take(aux, kj, axis=0)
         if cells.size:
             gpid = (self._owner(cells) * self.pps
                     + self.tables_np[cells, slots // ps])
@@ -620,6 +744,9 @@ class PagedBucketStore(BucketStore):
             sj = jnp.asarray(slots % ps, jnp.int32)
             self.pool = self.pool.at[gj, sj].set(x_sorted.astype(self.dtype))
             self.pool_ids = self.pool_ids.at[gj, sj].set(jnp.asarray(ids))
+            if self.has_aux and aux is not None:
+                self.pool_aux = self.pool_aux.at[gj, sj].set(
+                    jnp.asarray(aux, jnp.float32))
             self._counts_np += np.bincount(
                 cells, minlength=self.k).astype(np.int64)
         if ucells.size:                  # write-recency LRU clock
@@ -630,13 +757,19 @@ class PagedBucketStore(BucketStore):
 
     def gather_width(self, min_slots: int = 1) -> int:
         wp = _pow2ceil(max(1, int(self.pages_np.max()) if self.k else 1))
-        wp = max(wp, _ceil_div(max(1, min_slots), self.page_size))
+        wp = max(wp, _ceil_div(max(_sublane_min(self.dtype), min_slots),
+                               self.page_size))
         return min(wp, self.maxp) * self.page_size
 
     def device_arrays(self):
+        if self.has_aux:
+            return (self.pool, self.pool_ids, self.tables, self.pool_aux)
         return (self.pool, self.pool_ids, self.tables)
 
     def shard_specs(self, ka):
+        if self.has_aux:
+            return (P(ka, None, None), P(ka, None), P(ka, None),
+                    P(ka, None))
         return (P(ka, None, None), P(ka, None), P(ka, None))
 
     def _global_pids_np(self) -> np.ndarray:
@@ -669,14 +802,18 @@ class PagedBucketStore(BucketStore):
         gp = np.asarray(gp, np.int64)
         pool_np = np.asarray(self.pool)
         ids_np = np.asarray(self.pool_ids)
-        return {"pool_pages": pool_np[gp] if gp.size
-                else pool_np[:0],
-                "pool_page_ids": ids_np[gp] if gp.size else ids_np[:0],
-                "cell_pages": self.pages_np.astype(np.int32),
-                "counts": np.asarray(self.counts),
-                "last_touch": self.last_touch.copy(),
-                "spill_counts": self.spill_counts,
-                "evict_counts": self.evict_counts}
+        out = {"pool_pages": pool_np[gp] if gp.size
+               else pool_np[:0],
+               "pool_page_ids": ids_np[gp] if gp.size else ids_np[:0],
+               "cell_pages": self.pages_np.astype(np.int32),
+               "counts": np.asarray(self.counts),
+               "last_touch": self.last_touch.copy(),
+               "spill_counts": self.spill_counts,
+               "evict_counts": self.evict_counts}
+        if self.has_aux:
+            aux_np = np.asarray(self.pool_aux)
+            out["pool_page_aux"] = aux_np[gp] if gp.size else aux_np[:0]
+        return out
 
     def meta(self):
         return {"kind": self.kind, "page_size": self.page_size,
@@ -690,7 +827,8 @@ class PagedBucketStore(BucketStore):
         ps = int(meta["page_size"])
         st = cls(k, d, dtype, capacity=ps, page_size=ps,
                  max_cap=meta.get("max_cap"),
-                 max_bytes=meta.get("max_bytes"), n_shards=n_shards)
+                 max_bytes=meta.get("max_bytes"), n_shards=n_shards,
+                 aux="pool_page_aux" in host)
         st.maxp = max(1, int(meta["maxp"]))
         st.tables_np = np.zeros((k, st.maxp), np.int32)
         cell_pages = np.asarray(host["cell_pages"], np.int64)
@@ -705,8 +843,11 @@ class PagedBucketStore(BucketStore):
         st.pps = pps
         st._free = [list(range(1, pps)) for _ in range(n_shards)]
         np_dt = np.dtype(st.dtype.name)
-        pool_np = np.full((n_shards * pps, ps, d), _PAD_COORD, np_dt)
+        pool_np = np.full((n_shards * pps, ps, d),
+                          _pad_value(st.dtype), np_dt)
         ids_np = np.full((n_shards * pps, ps), -1, np.int32)
+        aux_np = np.zeros((n_shards * pps, ps), np.float32) \
+            if st.has_aux else None
         pages, page_ids = host["pool_pages"], host["pool_page_ids"]
         u = 0
         for c in range(k):
@@ -716,9 +857,13 @@ class PagedBucketStore(BucketStore):
                 st.tables_np[c, p] = pid
                 pool_np[sh * pps + pid] = pages[u]
                 ids_np[sh * pps + pid] = page_ids[u]
+                if aux_np is not None:
+                    aux_np[sh * pps + pid] = host["pool_page_aux"][u]
                 u += 1
         st.pool = jnp.asarray(pool_np)
         st.pool_ids = jnp.asarray(ids_np)
+        if st.has_aux:
+            st.pool_aux = jnp.asarray(aux_np)
         st.tables = jnp.asarray(st.tables_np)
         st.pages_np = cell_pages.astype(np.int32)
         st.counts = jnp.asarray(host["counts"], jnp.int32)
@@ -737,6 +882,8 @@ class PagedBucketStore(BucketStore):
         self.pool = pctx.put(self.pool, P(ka, None, None))
         self.pool_ids = pctx.put(self.pool_ids, P(ka, None))
         self.tables = pctx.put(self.tables, P(ka, None))
+        if self.has_aux:
+            self.pool_aux = pctx.put(self.pool_aux, P(ka, None))
         self.counts = pctx.put(self.counts, P(ka))
 
     def resident_bytes(self) -> int:
@@ -753,3 +900,335 @@ class PagedBucketStore(BucketStore):
         return (f"PagedBucketStore(k={self.k}, d={self.d}, "
                 f"page_size={self.page_size}, pages={self.occupied_pages()}"
                 f"/{self._n_shards * self.pps}, evicted={self.evicted})")
+
+
+# ---------------------------------------------------------------------------
+# quantized payloads: rescore reservoir + codec wrapper
+# ---------------------------------------------------------------------------
+
+class RescoreReservoir:
+    """Host-side full-precision row pool keyed by global id — the exact
+    half of two-phase search. The quantized scan proposes top-``R``
+    candidate ids; the verify phase looks their original f32 rows up
+    here (``O(b·R·d)``, never whole buckets). FIFO ring under an
+    optional byte budget: when full, the oldest rows fall out and those
+    candidates rescore from their decoded codes instead — recall
+    degrades gracefully, nothing breaks."""
+
+    def __init__(self, d: int, *, max_bytes: int | None = None):
+        self.d = int(d)
+        self.max_bytes = max_bytes
+        cap = self._cap_rows()
+        n0 = 0 if cap is None else cap
+        self._rows = np.zeros((n0, self.d), np.float32)
+        self._ids = np.full(n0, -1, np.int64)    # id held per row
+        self._id2row = np.full(1024, -1, np.int64)
+        self._cursor = 0
+        self.evicted = 0
+
+    def _cap_rows(self) -> int | None:
+        if self.max_bytes is None:
+            return None
+        return max(1, int(self.max_bytes) // (4 * self.d + 8))
+
+    def __len__(self) -> int:
+        return int((self._ids >= 0).sum())
+
+    def resident_bytes(self) -> int:
+        return self._rows.shape[0] * (4 * self.d + 8)
+
+    def _ensure_index(self, max_id: int) -> None:
+        if max_id >= self._id2row.size:
+            grown = np.full(_pow2ceil(max_id + 1), -1, np.int64)
+            grown[:self._id2row.size] = self._id2row
+            self._id2row = grown
+
+    def put(self, ids, x) -> None:
+        ids = np.asarray(ids, np.int64).reshape(-1)
+        x = np.asarray(x, np.float32).reshape(-1, self.d)
+        if ids.size == 0:
+            return
+        self._ensure_index(int(ids.max()))
+        row = self._id2row[ids]
+        have = row >= 0
+        if have.any():                      # refresh in place
+            self._rows[row[have]] = x[have]
+        new_ids, new_x = ids[~have], x[~have]
+        if new_ids.size == 0:
+            return
+        cap = self._cap_rows()
+        if cap is None:                     # unbounded: plain append
+            base = self._rows.shape[0]
+            self._rows = np.concatenate([self._rows, new_x])
+            self._ids = np.concatenate([self._ids, new_ids])
+            self._id2row[new_ids] = base + np.arange(new_ids.size)
+            return
+        if new_ids.size > cap:              # batch larger than the ring
+            self.evicted += new_ids.size - cap
+            new_ids, new_x = new_ids[-cap:], new_x[-cap:]
+        pos = (self._cursor + np.arange(new_ids.size)) % cap
+        old = self._ids[pos]
+        dropped = old[old >= 0]
+        self._id2row[dropped] = -1
+        self.evicted += int(dropped.size)
+        self._rows[pos] = new_x
+        self._ids[pos] = new_ids
+        self._id2row[new_ids] = pos
+        self._cursor = int((self._cursor + new_ids.size) % cap)
+
+    def lookup(self, ids) -> tuple[np.ndarray, np.ndarray]:
+        """``ids`` any-shape int -> (rows ``ids.shape + (d,)`` f32,
+        found bool). Missing / negative ids return zero rows."""
+        ids = np.asarray(ids, np.int64)
+        safe = np.clip(ids, 0, self._id2row.size - 1)
+        row = np.where((ids >= 0) & (ids < self._id2row.size),
+                       self._id2row[safe], -1)
+        found = row >= 0
+        out = np.zeros(ids.shape + (self.d,), np.float32)
+        out[found] = self._rows[row[found]]
+        return out, found
+
+    def state_arrays(self) -> dict:
+        """Occupied rows packed oldest-first (ring order), so a restore
+        rebuilds identical FIFO behavior."""
+        cap = self._cap_rows()
+        if cap is None:
+            keep = self._ids >= 0
+            return {"rescore_rows": self._rows[keep],
+                    "rescore_ids": self._ids[keep]}
+        order = (self._cursor + np.arange(cap)) % cap
+        order = order[self._ids[order] >= 0]
+        return {"rescore_rows": self._rows[order],
+                "rescore_ids": self._ids[order]}
+
+    @classmethod
+    def restore(cls, host, d: int, *, max_bytes=None) -> "RescoreReservoir":
+        res = cls(d, max_bytes=max_bytes)
+        res.put(host["rescore_ids"], host["rescore_rows"])
+        res.evicted = 0
+        return res
+
+
+class QuantizedBucketStore(BucketStore):
+    """Codec wrapper over either backend: the inner store holds int8
+    codes (its payload dtype is the codec's) plus the per-slot f32
+    scale sidecar; ids, page tables, the allocator/evictor, and the
+    canonical snapshot logic are the inner store's, untouched. The
+    wrapper owns the *anchors* — the cell centroids frozen at encode
+    time (``refresh`` moves the live routing centroids; decoding stays
+    against what the codes were built from) — and the optional
+    ``RescoreReservoir``. ``kind`` stays the inner backend's name (the
+    codec is an orthogonal axis, reported via ``codec_kind``)."""
+
+    def __init__(self, inner: BucketStore, codec, anchors, *,
+                 reservoir: RescoreReservoir | None = None,
+                 logical_dtype=jnp.float32):
+        # deliberately no super().__init__: all bookkeeping delegates
+        self._inner = inner
+        self.codec = codec
+        self.anchors = jnp.asarray(anchors, jnp.float32)
+        self.reservoir = reservoir
+        self.dtype = jnp.dtype(logical_dtype)   # what consumers feed us
+        self.k, self.d = inner.k, inner.d
+
+    # -- delegated bookkeeping ----------------------------------------
+
+    @property
+    def kind(self) -> str:
+        return self._inner.kind
+
+    @property
+    def codec_kind(self) -> str:
+        return self.codec.kind
+
+    @property
+    def counts(self):
+        return self._inner.counts
+
+    def set_counts(self, v) -> None:
+        self._inner.set_counts(v)
+
+    @property
+    def max_count(self) -> int:
+        return self._inner.max_count
+
+    @property
+    def max_cap(self):
+        return self._inner.max_cap
+
+    @property
+    def spilled(self) -> int:
+        return self._inner.spilled
+
+    @spilled.setter
+    def spilled(self, v) -> None:
+        self._inner.spilled = v
+
+    @property
+    def spill_counts(self):
+        return self._inner.spill_counts
+
+    @spill_counts.setter
+    def spill_counts(self, v) -> None:
+        self._inner.spill_counts = v
+
+    @property
+    def evicted(self) -> int:
+        return self._inner.evicted
+
+    @property
+    def evict_counts(self):
+        return self._inner.evict_counts
+
+    @property
+    def capacity(self) -> int:
+        return self._inner.capacity
+
+    @property
+    def page_param(self) -> int:
+        return self._inner.page_param
+
+    @property
+    def n_shards(self) -> int:
+        return self._inner.n_shards
+
+    def gather_width(self, min_slots: int = 1) -> int:
+        return self._inner.gather_width(min_slots)
+
+    def __getattr__(self, name):
+        # anything else (page_size, occupied_pages, maxp, ...) is the
+        # inner store's business
+        return getattr(self._inner, name)
+
+    # -- the contract --------------------------------------------------
+
+    def append(self, cells, x_sorted, ids):
+        if int(np.asarray(cells).shape[0]) == 0:
+            return
+        cj = jnp.asarray(np.asarray(cells), jnp.int32)
+        anchor_rows = jnp.take(self.anchors, cj, axis=0)
+        codes, scales = self.codec.encode(
+            jnp.asarray(x_sorted, jnp.float32), anchor_rows)
+        if self.reservoir is not None:
+            self.reservoir.put(np.asarray(ids),
+                               np.asarray(x_sorted, np.float32))
+        self._inner.append(cells, codes, ids, aux=scales)
+
+    def device_arrays(self):
+        return (*self._inner.device_arrays(), self.anchors)
+
+    def shard_specs(self, ka):
+        return (*self._inner.shard_specs(ka), P(ka, None))
+
+    def _dense_aux(self) -> np.ndarray:
+        inner = self._inner
+        if inner.kind == "padded":
+            return np.asarray(inner.bucket_aux)
+        gp = inner._global_pids_np().reshape(-1)
+        return np.asarray(inner.pool_aux)[gp].reshape(
+            self.k, inner.maxp * inner.page_size)
+
+    def dense(self):
+        """Decoded f32 oracle view, with reservoir rows (the exact
+        originals) overlaid where present — the same rows two-phase
+        rescore scores, so brute-vs-two-phase parity is exact."""
+        codes, ids = self._inner.dense()
+        aux = self._dense_aux()
+        x = np.asarray(self.anchors)[:, None, :] \
+            + codes.astype(np.float32) * aux[..., None]
+        if self.reservoir is not None:
+            rows, found = self.reservoir.lookup(ids)
+            x = np.where(found[..., None], rows, x)
+        x[ids < 0] = _PAD_COORD
+        return x.astype(np.float32), ids
+
+    def dense_ids(self):
+        return self._inner.dense_ids()
+
+    def flat(self):
+        x, ids = self.dense()
+        return (jnp.asarray(x.reshape(-1, self.d)),
+                jnp.asarray(ids.reshape(-1)))
+
+    def state_arrays(self):
+        out = self._inner.state_arrays()
+        out["anchors"] = np.asarray(self.anchors)
+        if self.reservoir is not None:
+            out.update(self.reservoir.state_arrays())
+        return out
+
+    def meta(self):
+        return dict(self._inner.meta(), codec=self.codec.kind,
+                    reservoir=self.reservoir is not None,
+                    rescore_bytes=None if self.reservoir is None
+                    else self.reservoir.max_bytes)
+
+    @classmethod
+    def restore(cls, host, meta, *, k, d, dtype, n_shards=1):
+        from repro.index.quant import make_codec
+        codec = make_codec(meta["codec"])
+        kind = meta.get("kind", "padded")
+        if kind == "padded":
+            inner = PaddedBucketStore.restore(host, meta, k=k, d=d,
+                                              dtype=codec.pool_dtype)
+        else:
+            inner = PagedBucketStore.restore(host, meta, k=k, d=d,
+                                             dtype=codec.pool_dtype,
+                                             n_shards=n_shards)
+        reservoir = None
+        if meta.get("reservoir") and "rescore_ids" in host:
+            reservoir = RescoreReservoir.restore(
+                host, d, max_bytes=meta.get("rescore_bytes"))
+        return cls(inner, codec, host["anchors"], reservoir=reservoir,
+                   logical_dtype=dtype)
+
+    def place(self, pctx) -> None:
+        self._inner.place(pctx)
+        self.anchors = pctx.put(self.anchors, P(pctx.k_axis, None))
+
+    def resident_bytes(self) -> int:
+        return self._inner.resident_bytes() + self.k * self.d * 4
+
+    def payload_bytes(self) -> int:
+        """Device bytes of codes+ids(+scales) alone — the apples-to-
+        apples ~0.25x comparison against an fp32 store's payload."""
+        return self._inner.resident_bytes()
+
+    def block_until_ready(self) -> None:
+        self._inner.block_until_ready()
+
+    def __repr__(self):
+        res = len(self.reservoir) if self.reservoir is not None else 0
+        return (f"QuantizedBucketStore(codec={self.codec.kind}, "
+                f"inner={self._inner!r}, reservoir_rows={res})")
+
+
+def make_quantized_store(kind: str | None, k: int, d: int, dtype, *,
+                         anchors, codec: str = "q8", capacity: int = 8,
+                         max_cap: int | None = None,
+                         page_size: int | None = None,
+                         max_bytes: int | None = None, n_shards: int = 1,
+                         rescore_bytes: int | None = None,
+                         reservoir: bool = True) -> QuantizedBucketStore:
+    """Codec-wrapped store: like ``make_store`` but the payload pool
+    holds codec codes (+ per-slot scale sidecar), with an optional
+    byte-budgeted full-precision rescore reservoir (``reservoir=False``
+    falls back to decoded-code rescoring)."""
+    from repro.index.quant import make_codec
+    cdc = make_codec(codec)
+    kind = kind or default_store_kind()
+    if kind == "padded":
+        inner = PaddedBucketStore(k, d, cdc.pool_dtype, capacity=capacity,
+                                  max_cap=max_cap, aux=True)
+    elif kind == "paged":
+        inner = PagedBucketStore(k, d, cdc.pool_dtype, capacity=capacity,
+                                 max_cap=max_cap,
+                                 page_size=page_size or 64,
+                                 max_bytes=max_bytes, n_shards=n_shards,
+                                 aux=True)
+    else:
+        raise ValueError(f"unknown bucket store kind {kind!r}")
+    res = RescoreReservoir(d, max_bytes=rescore_bytes) if reservoir \
+        else None
+    return QuantizedBucketStore(inner, cdc, anchors, reservoir=res,
+                                logical_dtype=dtype)

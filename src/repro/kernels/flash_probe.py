@@ -149,6 +149,110 @@ def _flash_probe_grouped_kernel(q_ref, c_ref, i_ref, v_ref, v_scr, i_scr, *,
         v_ref[...] = v_scr[...]
 
 
+def _flash_probe_grouped_q8_kernel(q_ref, c_ref, s_ref, i_ref, v_ref,
+                                   v_scr, i_scr, *, block_w: int,
+                                   w_total: int, l: int):
+    """One (query-tile, probe-slot, code-tile) grid step.
+
+    The quantized posting-list scan: candidates arrive as int8 residual
+    codes plus a per-slot f32 scale, laid out ``(B, nprobe, W, d)`` —
+    probe-rank major, exactly the fp32 scan's candidate order. The
+    query side is pre-shifted per probe slot (``q' = q - anchor[cell]``,
+    computed once per (query, probe) outside the kernel, ``O(b·nprobe·d)``
+    HBM — never per candidate), so the in-kernel score is the *true*
+    quantized squared distance
+
+        ||q' - s·code||^2 = ||q'||^2 - 2 s (q'.code) + s^2 ||code||^2
+
+    which is globally comparable across probe slots (no per-cell offset
+    to reconcile). Dequantization happens in VMEM against the resident
+    tile: HBM streams 1 byte/dim + one f32 scale per row instead of 4
+    bytes/dim. Empty / padded slots carry scale exactly 0.0 and are
+    masked to +inf — no id lookup in the hot loop. Selection state and
+    tie rules are the grouped fp32 kernel's.
+    """
+    pt = pl.program_id(1)
+    wt = pl.program_id(2)
+    np_ = pl.num_programs(1)
+    nw = pl.num_programs(2)
+
+    @pl.when((pt == 0) & (wt == 0))
+    def _init():
+        v_scr[...] = jnp.full_like(v_scr[...], _INF)
+        i_scr[...] = jnp.zeros_like(i_scr[...])
+
+    qp = q_ref[...].reshape(q_ref.shape[0], -1).astype(jnp.float32)
+    c = c_ref[...].reshape(c_ref.shape[0], block_w, -1)   # (bq, bw, d)
+    s = s_ref[...].reshape(s_ref.shape[0], block_w)       # (bq, bw) f32
+
+    r = c.astype(jnp.float32) * s[..., None]              # dequant in VMEM
+    cross = jnp.sum(qp[:, None, :] * r, axis=-1)          # (bq, bw)
+    rsq = jnp.sum(r * r, axis=-1)
+    qsq = jnp.sum(qp * qp, axis=-1)
+    score = qsq[:, None] - 2.0 * cross + rsq
+
+    c_ids = (pt * w_total + wt * block_w
+             + jax.lax.broadcasted_iota(jnp.int32, score.shape, 1))
+    score = jnp.where(s > 0.0, score, _INF)
+
+    mv = jnp.concatenate([v_scr[...], score], axis=1)
+    mi = jnp.concatenate([i_scr[...], c_ids], axis=1)
+    new_v, new_i = _select_l_best(mv, mi, l)
+    v_scr[...] = new_v
+    i_scr[...] = new_i
+
+    @pl.when((pt == np_ - 1) & (wt == nw - 1))
+    def _flush():
+        i_ref[...] = i_scr[...]
+        v_ref[...] = v_scr[...]
+
+
+def flash_probe_grouped_q8_raw(qp: Array, codes: Array, scales: Array, *,
+                               l: int, block_b: int, block_w: int,
+                               interpret: bool = False
+                               ) -> tuple[Array, Array]:
+    """Pallas call on pre-padded inputs (the quantized scan).
+
+    qp: (B_pad, nprobe, d) f32 per-probe shifted queries, codes:
+    (B_pad, nprobe, W_pad, d) int8, scales: (B_pad, nprobe, W_pad) f32
+    with B_pad % block_b == W_pad % block_w == 0; padding slots must
+    carry scale 0.0. Returns ``(indices int32 (B_pad, l), dists f32
+    (B_pad, l))`` — indices into the flattened (nprobe·W_pad) candidate
+    axis, dists the true quantized squared distances.
+    """
+    b_pad, nprobe, d = qp.shape
+    w_pad = codes.shape[2]
+    grid = (b_pad // block_b, nprobe, w_pad // block_w)
+
+    kernel = functools.partial(
+        _flash_probe_grouped_q8_kernel, block_w=block_w, w_total=w_pad,
+        l=l)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, 1, d), lambda i, p, w: (i, p, 0)),
+            pl.BlockSpec((block_b, 1, block_w, d),
+                         lambda i, p, w: (i, p, w, 0)),
+            pl.BlockSpec((block_b, 1, block_w), lambda i, p, w: (i, p, w)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_b, l), lambda i, p, w: (i, 0)),
+            pl.BlockSpec((block_b, l), lambda i, p, w: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b_pad, l), jnp.int32),
+            jax.ShapeDtypeStruct((b_pad, l), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_b, l), jnp.float32),
+            pltpu.VMEM((block_b, l), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, codes, scales)
+
+
 def flash_probe_grouped_raw(q: Array, c: Array, *, l: int, block_b: int,
                             block_c: int, c_actual: int,
                             interpret: bool = False) -> tuple[Array, Array]:

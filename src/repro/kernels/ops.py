@@ -119,6 +119,8 @@ def _audit_blocks(op: str, bn: int, bk: int, d: int, itemsize: int, *,
         l_pad = _round_up(max(1, l), 8)
         if op == "probe":
             return H.probe_footprint(a, b, l_pad, d, itemsize)
+        if op == "scan_q8":
+            return H.scan_q8_footprint(a, b, l_pad, d)
         return H.scan_footprint(a, b, l_pad, d, itemsize)
 
     ceiling = hw.vmem_bytes
@@ -395,6 +397,57 @@ def flash_probe_grouped(q: Array, c: Array, *, l: int,
         q32 = q.astype(jnp.float32)
         v = v + jnp.sum(q32 * q32, axis=-1, keepdims=True)
         v = jnp.maximum(v, 0.0)
+    return idx, v
+
+
+@functools.partial(jax.jit, static_argnames=("l", "block_b", "block_w",
+                                             "plan", "interpret"))
+def flash_probe_grouped_q8(qp: Array, codes: Array, scales: Array, *,
+                           l: int, block_b: int | None = None,
+                           block_w: int | None = None, plan=None,
+                           interpret: bool | None = None
+                           ) -> tuple[Array, Array]:
+    """Quantized per-query-candidate top-L scan (dequant in VMEM).
+
+    qp: (B, nprobe, d) f32 per-probe shifted queries
+    (``q - anchor[cell]``), codes: (B, nprobe, W, d) int8 residual
+    codes, scales: (B, nprobe, W) f32 per-slot scales (exactly 0.0 on
+    empty/padded slots). Returns ``(indices int32 (B, l), dists f32
+    (B, l))`` ascending — indices address the flattened unpadded
+    ``nprobe·W`` candidate axis in probe-rank-major order (the fp32
+    scan's ordering), dists are true quantized squared distances
+    (nothing to re-add). Rows with fewer than ``l`` live candidates
+    pad with ``+inf`` dists — callers mask those before trusting ids.
+    """
+    if interpret is None:
+        interpret = default_interpret()
+    b, nprobe, d = qp.shape
+    w = codes.shape[2]
+    c_n = nprobe * w
+    if l > c_n:
+        raise ValueError(f"flash_probe_grouped_q8 needs l <= nprobe*W, "
+                         f"got l={l} > {c_n}")
+    if l < 1:
+        raise ValueError(f"flash_probe_grouped_q8 needs l >= 1, got l={l}")
+    l_pad = _round_up(l, 8)
+    block_b, block_w = _resolve_blocks("scan_q8", (b, c_n, d, l),
+                                       codes.dtype, block_b, block_w, plan)
+    block_b = min(block_b, _round_up(b, 8))
+    block_w = min(block_w, _round_up(w, 8))
+    block_b, block_w = _audit_blocks("scan_q8", block_b, block_w, d,
+                                     codes.dtype.itemsize, l=l,
+                                     hw_name=plan.hw if plan else None)
+    qpp = _pad_to(qp, block_b, 0, 0)
+    cp = _pad_to(_pad_to(codes, block_b, 0, 0), block_w, 2, 0)
+    sp = _pad_to(_pad_to(scales, block_b, 0, 0), block_w, 2, 0.0)
+    w_pad = cp.shape[2]
+    idx, v = _fp.flash_probe_grouped_q8_raw(
+        qpp, cp, sp, l=l_pad, block_b=block_b, block_w=block_w,
+        interpret=interpret)
+    idx, v = idx[:b, :l], v[:b, :l]
+    # kernel indices address the padded W axis; remap to the unpadded
+    # candidate layout the caller gathered (probe-rank major)
+    idx = (idx // w_pad) * w + jnp.minimum(idx % w_pad, w - 1)
     return idx, v
 
 

@@ -89,7 +89,8 @@ def _serve_search(args) -> None:
     t0 = time.time()
     index = IVFIndex.build(x, k=args.kc, max_iters=args.kmeans_iters,
                            pctx=pctx, store=args.store,
-                           page_size=args.page_size)
+                           page_size=args.page_size, codec=args.codec,
+                           rescore_mult=args.rescore_mult)
     index.block_until_ready()
     t_build = time.time() - t0
     print(f"bucket store: {index.store!r} "
@@ -178,6 +179,15 @@ def main() -> None:
                          "REPRO_BUCKET_STORE env, else padded)")
     ap.add_argument("--page-size", type=int, default=None,
                     help="paged-store page size in slots (default 64)")
+    ap.add_argument("--codec", default=None,
+                    choices=["fp32", "q8"],
+                    help="posting-list payload codec (default: "
+                         "REPRO_BUCKET_CODEC env, else fp32); q8 stores "
+                         "int8 residual codes and searches in two phases "
+                         "(quantized propose + exact fp32 rescore)")
+    ap.add_argument("--rescore-mult", type=int, default=4,
+                    help="two-phase proposal depth R = rescore_mult*topk "
+                         "(q8 codec only)")
     # reliability (--mode search)
     ap.add_argument("--snapshot-dir", default=None,
                     help="durable index snapshots + write-ahead add-log "

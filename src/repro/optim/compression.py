@@ -19,26 +19,29 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core.quant8 import (dequantize_symmetric, quantize_symmetric,
+                               symmetric_scale)
+
 Array = jax.Array
 
 BLOCK = 256
 
 
 def quantize_int8(x: Array) -> tuple[Array, Array]:
-    """Per-block symmetric int8. x: any shape -> (q int8, scales f32)."""
+    """Per-block symmetric int8. x: any shape -> (q int8, scales f32).
+
+    Rounding/scale convention (incl. the scale-epsilon guard) comes from
+    ``core.quant8`` — the same one the quantized bucket codecs use."""
     flat = x.reshape(-1)
     pad = (-flat.shape[0]) % BLOCK
     flat = jnp.pad(flat, (0, pad))
     blocks = flat.reshape(-1, BLOCK)
-    scale = jnp.max(jnp.abs(blocks), axis=1) / 127.0
-    scale = jnp.maximum(scale, 1e-12)
-    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127
-                 ).astype(jnp.int8)
-    return q, scale
+    scale = symmetric_scale(jnp.max(jnp.abs(blocks), axis=1))
+    return quantize_symmetric(blocks, scale[:, None]), scale
 
 
 def dequantize_int8(q: Array, scale: Array, shape) -> Array:
-    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    flat = dequantize_symmetric(q, scale[:, None]).reshape(-1)
     n = 1
     for d in shape:
         n *= d

@@ -37,7 +37,11 @@ from repro.checkpoint.checkpointer import array_manifest, validate_arrays
 from repro.core.streaming import SufficientStats
 from repro.index import store as _store
 
-SNAPSHOT_VERSION = 2
+# v3 adds the payload-codec axis: quantized stores serialize their int8
+# pools + scale sidecars + anchors (+ the rescore reservoir, packed in
+# ring order) and ``manifest["store"]["codec"]`` records the codec kind.
+# v1/v2 manifests have no "codec" key and restore as plain fp32 stores.
+SNAPSHOT_VERSION = 3
 _PREFIX, _SUFFIX = "index_", ".npz"
 MANIFEST = "index_manifest.json"
 

@@ -231,6 +231,64 @@ def test_inprocess_paged_store_sharded_ids_identical():
     assert np.array_equal(np.asarray(ids_sh), np.asarray(ids_ref))
 
 
+def test_inprocess_q8_store_sharded_ids_identical():
+    """Quantized (q8) bucket payloads on a (2 data x 4 cells) mesh: the
+    int8 pools, scale sidecars and anchors shard over the cells axis,
+    phase-1 proposals merge across shards (top-R + one O(b·R·d) row
+    exchange), and the host-side exact rescore reproduces the
+    single-device q8 index id-for-id — and brute force at full nprobe."""
+    _require_devices(8)
+    import jax
+    import numpy as np
+    from repro.core.parallel import ParallelContext, build_mesh
+    from repro.index import IVFIndex
+    key = jax.random.PRNGKey(5)
+    kc, ka, kn, kq = jax.random.split(key, 4)
+    k, d, n = 16, 8, 1024
+    centers = jax.random.normal(kc, (k, d)) * 5.0
+    x = centers[jax.random.randint(ka, (n,), 0, k)] \
+        + 0.3 * jax.random.normal(kn, (n, d))
+    q = x[jax.random.randint(kq, (64,), 0, n)]
+    pctx = ParallelContext.for_mesh(build_mesh((2, 4), ("data", "model")))
+    for kind in ("padded", "paged"):
+        ref = IVFIndex(centers, capacity=128, store=kind, codec="q8",
+                       page_size=16)
+        sh = IVFIndex(centers, capacity=128, pctx=pctx, store=kind,
+                      codec="q8", page_size=16)
+        assert sh.store.kind == kind and sh.codec_kind == "q8"
+        ref.add(x)
+        sh.add(x)
+        for nprobe in (4, k):
+            ids_ref, _ = ref.search(q, topk=10, nprobe=nprobe)
+            ids_sh, _ = sh.search(q, topk=10, nprobe=nprobe)
+            assert np.array_equal(np.asarray(ids_sh),
+                                  np.asarray(ids_ref)), \
+                f"{kind} nprobe={nprobe}"
+        # full probe + sufficient R == brute force, up to near-tie swaps
+        # (the rescore kernel and the brute reference accumulate f32
+        # distances in different orders; same contract as test_ivf.py)
+        ids_bf, d_bf = sh.search_brute(q, topk=10)
+        ids_sh, d_sh = sh.search(q, topk=10, nprobe=k)
+        ids_sh, ids_bf = np.asarray(ids_sh), np.asarray(ids_bf)
+        d_sh, d_bf = np.asarray(d_sh), np.asarray(d_bf)
+        np.testing.assert_allclose(d_sh, d_bf, rtol=1e-4, atol=1e-3)
+        for r in range(ids_sh.shape[0]):
+            for j in np.nonzero(ids_sh[r] != ids_bf[r])[0]:
+                assert abs(d_sh[r, j] - d_bf[r, j]) <= 1e-3, (kind, r, j)
+            assert set(ids_sh[r].tolist()) == set(ids_bf[r].tolist()), \
+                (kind, r)
+        # online mutation keeps the contract
+        x2 = centers[jax.random.randint(kq, (257,), 0, k)] \
+            + 0.3 * jax.random.normal(kn, (257, d))
+        ref.add(x2)
+        sh.add(x2)
+        ref.refresh()
+        sh.refresh()
+        ids_ref, _ = ref.search(q, topk=10, nprobe=k)
+        ids_sh, _ = sh.search(q, topk=10, nprobe=k)
+        assert np.array_equal(np.asarray(ids_sh), np.asarray(ids_ref)), kind
+
+
 def test_inprocess_dead_k_shard_is_robust():
     _require_devices(8)
     import jax

@@ -175,8 +175,10 @@ def test_paged_lru_eviction_under_byte_budget():
     d, ps = 8, 8
     centers = jnp.asarray(np.eye(4, d, dtype=np.float32) * 40.0)
     budget = 8 * ps * (d * 4 + 4)        # 8 pages: fits 2 of the 4 cells
+    # the budget arithmetic above is fp32 page bytes: pin the codec so
+    # the REPRO_BUCKET_CODEC=q8 CI leg doesn't resize the pages under it
     idx = IVFIndex(centers, capacity=16, store="paged", page_size=ps,
-                   store_bytes=budget)
+                   store_bytes=budget, codec="fp32")
     key = jax.random.PRNGKey(0)
     # touch cells 0..3 in order; each batch fills ~6 pages
     for c in range(4):
@@ -205,9 +207,9 @@ def test_paged_snapshot_is_canonical_after_fragmentation(tmp_path):
     identical results from a compact pool."""
     d, ps = 8, 8
     centers = jnp.asarray(np.eye(4, d, dtype=np.float32) * 40.0)
-    budget = 8 * ps * (d * 4 + 4)
+    budget = 8 * ps * (d * 4 + 4)        # fp32 page bytes: pin the codec
     idx = IVFIndex(centers, capacity=16, store="paged", page_size=ps,
-                   store_bytes=budget)
+                   store_bytes=budget, codec="fp32")
     key = jax.random.PRNGKey(1)
     for c in range(4):                   # forces eviction of cell 0
         idx.add(centers[c] + 0.1 * jax.random.normal(
@@ -255,8 +257,9 @@ def test_zero_raw_bucket_tensor_sites_outside_store():
     """The acceptance invariant of the BucketStore refactor: outside
     ``index/store.py`` no module reads or writes a raw posting-list
     tensor attribute — every access goes through the store contract."""
-    raw = re.compile(r"\.(buckets|bucket_ids|pool|pool_ids|tables"
-                     r"|tables_np|pages_np|last_touch|_free)\b")
+    raw = re.compile(r"\.(buckets|bucket_ids|bucket_aux|pool|pool_ids"
+                     r"|pool_aux|tables|tables_np|pages_np|last_touch"
+                     r"|_free)\b")
     offenders = []
     for dirpath, _, files in os.walk(SRC):
         for f in files:
